@@ -1,0 +1,32 @@
+"""Fig. 7: portability — the interface fixes on other backends, plus
+the beyond-paper stage 10 (MC-pipeline/PHY delay buffer, the paper's
+future-work suggestion).
+"""
+from __future__ import annotations
+
+from benchmarks.util import emit, run_sweep, write_csv
+from repro.core import reference
+
+
+def main(full: bool = False):
+    out = {}
+    for stage, name in (("07-prefetch", "ramulator"),
+                        ("08-dramsim3", "dramsim3"),
+                        ("09-ramulator2", "ramulator2"),
+                        ("10-delay-buffer", "delay_buffer")):
+        res, us = run_sweep(stage, full=full)
+        write_csv(res, f"fig7_{name}")
+        out[name] = res
+        emit(f"fig7.{name}.unloaded_ns", us,
+             f"{res.app_lat[0, 0]:.1f} (actual: {reference.UNLOADED_NS})")
+        emit(f"fig7.{name}.saturation_gbs", us,
+             f"{res.app_bw[0].max():.1f} "
+             f"(actual: {reference.max_bandwidth_gbs(1.0):.0f})")
+        emit(f"fig7.{name}.saturated_ns", us,
+             f"{res.app_lat[0].max():.0f} (actual: 240-390; "
+             f"paper: sims underpredict by up to 214)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Roofline bench: summarize the dry-run records (§Roofline source).
+
+Reads reports/dryrun/<mesh>/*.json (produced by
+``python -m repro.launch.dryrun --all --mesh both``) and emits the
+per-cell roofline terms.  Does NOT recompile — the dry-run is the
+expensive step and is cached.
+"""
+from __future__ import annotations
+
+from benchmarks.util import emit
+from repro.perfmodel.report import load_records
+
+
+def main(full: bool = False):
+    for mesh in ("pod", "multipod"):
+        recs = load_records(mesh=mesh)
+        if not recs:
+            emit(f"roofline.{mesh}", 0.0,
+                 "NO RECORDS — run python -m repro.launch.dryrun --all")
+            continue
+        for r in recs:
+            dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+            emit(f"roofline.{mesh}.{r['arch']}.{r['shape']}",
+                 r["compile_s"] * 1e6,
+                 f"bound={r['bottleneck']} "
+                 f"compute={r['compute_s'] * 1e3:.1f}ms "
+                 f"memory={r['memory_s'] * 1e3:.1f}ms "
+                 f"collective={r['collective_s'] * 1e3:.1f}ms "
+                 f"useful={r['useful_ratio']:.2f} "
+                 f"frac={r['compute_s'] / dom if dom else 0:.3f} "
+                 f"GiB/dev={r['bytes_per_device'] / 2 ** 30:.2f}")
+
+
+if __name__ == "__main__":
+    main()

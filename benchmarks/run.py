@@ -1,0 +1,46 @@
+"""Benchmark aggregator: one section per paper figure/table.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``--full`` runs the
+paper-resolution sweeps (14 paces x 5 mixes, 96 windows); the default
+is CI-speed (6 paces x 3 mixes, 48 windows).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names (fig2,...)")
+    args = ap.parse_args()
+
+    from benchmarks import (fig2_baseline, fig3_fig4_clocking,
+                            fig5_model_correct, fig6_enhancements,
+                            fig7_portability, kernels_bench,
+                            roofline_bench)
+    benches = {
+        "fig2": fig2_baseline.main,
+        "fig3_fig4": fig3_fig4_clocking.main,
+        "fig5": fig5_model_correct.main,
+        "fig6": fig6_enhancements.main,
+        "fig7": fig7_portability.main,
+        "kernels": kernels_bench.main,
+        "roofline": roofline_bench.main,
+    }
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        print(f"# --- {name} ---", file=sys.stderr)
+        fn(full=args.full)
+    print(f"# total {time.time() - t0:.0f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Shared benchmark machinery: timing, CSV output, artifact format."""
+from __future__ import annotations
+
+import csv
+import os
+import time
+
+from repro.core import get_stage, sweep
+from repro.core.mess import DEFAULT_PACES, WRITE_MIXES
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "reports",
+                       "benchmarks")
+
+#: run.py defaults — CI-speed; pass --full for paper-resolution sweeps
+FAST_PACES = (1, 4, 12, 24, 48, 64)
+FAST_MIXES = (0, 16, 32)
+FAST_WINDOWS = dict(windows=48, warmup=16)
+
+
+def run_sweep(stage: str, *, full: bool = False):
+    kw = {} if full else FAST_WINDOWS
+    cfg = get_stage(stage, **kw)
+    t0 = time.perf_counter()
+    res = sweep(cfg,
+                paces=DEFAULT_PACES if full else FAST_PACES,
+                write_mixes=WRITE_MIXES if full else FAST_MIXES)
+    wall = time.perf_counter() - t0
+    n_points = len(res.paces) * len(res.write_mixes)
+    return res, wall / n_points * 1e6     # us per simulated point
+
+
+def write_csv(res, name: str):
+    """Artifact-format bandwidth_latency.csv per stage."""
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.csv")
+    rows = res.to_rows()
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0]))
+        w.writeheader()
+        w.writerows(rows)
+    return path
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,45 @@
+"""The paper's experiment end-to-end: stage progression vs ground truth.
+
+Runs every artifact stage (00-10) through the Mess characterization and
+prints the key validation metrics of each figure next to the measured
+Intel Skylake reference — the exact validation loop the paper argues
+for: judge simulators at the APPLICATION view against real-HW curves.
+
+Run:  PYTHONPATH=src python examples/mess_validation.py [--full]
+"""
+import argparse
+
+import numpy as np
+
+from repro.core import STAGE_ORDER, get_stage, sweep
+from repro.core import reference
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    kw = {} if args.full else dict(windows=48, warmup=16)
+    paces = (1, 4, 12, 24, 48, 64)
+
+    print(f"{'stage':18s} {'unloaded':>9s} {'sat-bw':>7s} {'sat-lat':>8s} "
+          f"{'if/sim bw':>9s} {'app flat?':>9s}")
+    print(f"{'actual Skylake':18s} {reference.UNLOADED_NS:9.1f} "
+          f"{reference.max_bandwidth_gbs(1.0):7.1f} "
+          f"{reference.latency_ns(119, 1.0):8.1f} {'1.00':>9s} {'no':>9s}")
+    print("-" * 66)
+    for stage in STAGE_ORDER:
+        res = sweep(get_stage(stage, **kw), paces=paces, write_mixes=(0,))
+        ratio = float((res.if_bw / np.maximum(res.sim_bw, 1e-9)).mean())
+        flat = "YES(bug)" if np.ptp(res.app_lat[0]) < 2.0 else "no"
+        print(f"{stage:18s} {res.app_lat[0, 0]:9.1f} "
+              f"{res.app_bw[0].max():7.1f} {res.app_lat[0].max():8.1f} "
+              f"{ratio:9.2f} {flat:>9s}")
+    print("\napp-view columns; the paper's narrative reads top to "
+          "bottom:\n 01: flat 24 ns + inflated bw -> 03: bw fixed -> "
+          "04: latency recoupled -> 05-07: gradient/NOC/prefetch -> "
+          "10: unloaded matches actual.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Quickstart: both halves of the framework in two minutes.
+
+1. The paper core: Mess-characterize the integrated CPU+memory
+   simulator at the baseline and corrected stages — watch the
+   application view decouple (bug) and recouple (fix).
+2. The LM substrate: train a small GQA transformer on synthetic data
+   for 60 steps and greedy-decode from it.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import get_stage, sweep
+from repro.data.synthetic import DataConfig, Stream
+from repro.models.common import ModelConfig
+from repro.models.registry import get_model
+from repro.serve.engine import Engine, Request
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def part1_simulator():
+    print("=" * 64)
+    print("1) Memory-system simulation: three views, two stages")
+    print("=" * 64)
+    for stage in ("01-baseline", "04-model-correct"):
+        res = sweep(get_stage(stage, windows=32, warmup=12),
+                    paces=(2, 24, 56), write_mixes=(0,))
+        print(f"\n[{stage}] bandwidth sweep (100% reads):")
+        print("   used GB/s | sim-view ns | iface ns | APP ns")
+        for j in range(len(res.paces)):
+            print(f"   {res.app_bw[0, j]:9.1f} | {res.sim_lat[0, j]:11.1f}"
+                  f" | {res.if_lat[0, j]:8.1f} | {res.app_lat[0, j]:6.1f}")
+    print("\n-> baseline app view is stuck at ~24 ns (the decoupling "
+          "bug);\n   the corrected stage tracks the memory system.")
+
+
+def part2_train_and_serve():
+    print("\n" + "=" * 64)
+    print("2) LM substrate: train a tiny GQA transformer + serve it")
+    print("=" * 64)
+    cfg = ModelConfig(name="quickstart", n_layers=2, d_model=128,
+                      n_heads=8, n_kv_heads=2, d_ff=256, vocab=256,
+                      dtype=jnp.float32)
+    api = get_model(cfg)
+    data = DataConfig(vocab=256, seq_len=64, global_batch=8,
+                      structure=0.9)
+    trainer = Trainer(api, AdamWConfig(lr=1e-3, warmup_steps=10),
+                      TrainerConfig(total_steps=60, ckpt_every=0,
+                                    log_every=20))
+    res = trainer.fit(Stream(data))
+    print(f"loss: {res['losses'][0]:.3f} -> {res['losses'][-1]:.3f}")
+
+    eng = Engine(api, trainer.params, n_slots=2, max_seq=64)
+    eng.submit(Request(rid=0, prompt=[5, 17, 23], max_new=8))
+    eng.submit(Request(rid=1, prompt=[9, 2], max_new=8))
+    for r in eng.run():
+        print(f"request {r.rid}: prompt={r.prompt} -> {r.out}")
+
+
+if __name__ == "__main__":
+    part1_simulator()
+    part2_train_and_serve()

@@ -1,0 +1,62 @@
+"""Serving example: continuous batching over a slot pool.
+
+Loads (or trains briefly) a small model and pushes a stream of
+requests through the Engine — demonstrating slot admission, per-slot
+KV-cache isolation, and the decode step that the dry-run's decode
+cells lower at production scale.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--arch zamba2-2.7b]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry as cfgs
+from repro.models.common import ModelConfig
+from repro.models.registry import get_model
+from repro.serve.engine import Engine, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(cfgs.ARCHS), default=None,
+                    help="serve the smoke variant of an assigned arch")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = (cfgs.get_smoke(args.arch) if args.arch else
+           ModelConfig(name="serve-demo", n_layers=2, d_model=128,
+                       n_heads=8, n_kv_heads=2, d_ff=256, vocab=512,
+                       dtype=jnp.float32))
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    ctx = None
+    if api.needs_ctx:
+        ctx = jnp.asarray(np.random.default_rng(0).standard_normal(
+            (args.slots, cfg.n_ctx_tokens, cfg.d_model)), jnp.float32)
+
+    eng = Engine(api, params, n_slots=args.slots, max_seq=128, ctx=ctx)
+    rng = np.random.default_rng(1)
+    for i in range(args.requests):
+        plen = int(rng.integers(2, 8))
+        eng.submit(Request(
+            rid=i, prompt=list(rng.integers(1, cfg.vocab, plen)),
+            max_new=int(rng.integers(4, 12))))
+
+    t0 = time.perf_counter()
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out) for r in done)
+    print(f"[serve_lm] {cfg.name}: {len(done)}/{args.requests} requests, "
+          f"{toks} tokens in {dt:.1f}s "
+          f"({toks / dt:.1f} tok/s across {args.slots} slots)")
+    for r in done[:4]:
+        print(f"  rid={r.rid} prompt={r.prompt} -> {r.out}")
+
+
+if __name__ == "__main__":
+    main()

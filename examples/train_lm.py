@@ -1,0 +1,76 @@
+"""End-to-end training driver: ~100M-param LM for a few hundred steps.
+
+The default profile is sized for this CPU container (a ~12M model,
+200 steps, a few minutes).  ``--profile 100m`` selects the full
+~100M-parameter model x 300 steps the assignment describes — the same
+code path, bigger numbers.  Checkpointing, preemption handling and
+straggler detection are live in both profiles (SIGTERM the process and
+restart it with the same args: it resumes).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--profile 100m]
+      [--arch <assigned-arch>]    # train a smoke variant of any arch
+"""
+import argparse
+
+import jax.numpy as jnp
+
+from repro.configs import registry as cfgs
+from repro.data.synthetic import DataConfig, Stream
+from repro.models.common import ModelConfig
+from repro.models.registry import count_params, get_model
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+PROFILES = {
+    "small": dict(
+        cfg=ModelConfig(name="lm-12m", n_layers=4, d_model=256,
+                        n_heads=8, n_kv_heads=4, d_ff=1024, vocab=8192,
+                        dtype=jnp.float32),
+        steps=200, batch=8, seq=256),
+    "100m": dict(
+        cfg=ModelConfig(name="lm-100m", n_layers=12, d_model=768,
+                        n_heads=12, n_kv_heads=4, d_ff=2048, vocab=32000,
+                        dtype=jnp.float32),
+        steps=300, batch=32, seq=512),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--profile", choices=PROFILES, default="small")
+    ap.add_argument("--arch", choices=list(cfgs.ARCHS), default=None,
+                    help="train the smoke variant of an assigned arch")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    prof = PROFILES[args.profile]
+    cfg = cfgs.get_smoke(args.arch) if args.arch else prof["cfg"]
+    api = get_model(cfg)
+    steps = args.steps or prof["steps"]
+    vocab = cfg.vocab
+    data = DataConfig(vocab=vocab, seq_len=prof["seq"],
+                      global_batch=prof["batch"], structure=0.85)
+
+    trainer = Trainer(
+        api,
+        AdamWConfig(lr=3e-4, warmup_steps=max(10, steps // 20),
+                    total_steps=steps),
+        TrainerConfig(total_steps=steps, ckpt_every=max(50, steps // 4),
+                      ckpt_dir=args.ckpt_dir, accum=2, log_every=10,
+                      compress_grads=args.compress_grads))
+    n = count_params(trainer.params)
+    print(f"[train_lm] {cfg.name}: {n / 1e6:.1f}M params, "
+          f"{steps} steps, batch {prof['batch']} x seq {prof['seq']}")
+    if trainer.maybe_resume():
+        print(f"[train_lm] resuming at step {trainer.step_idx}")
+    stream = Stream(data)
+    stream.seek(trainer.step_idx)
+    res = trainer.fit(stream)
+    print(f"[train_lm] done: step {res['final_step']}, "
+          f"loss {res['losses'][0]:.3f} -> {res['losses'][-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

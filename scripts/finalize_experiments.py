@@ -1,0 +1,37 @@
+"""Append the final roofline tables to EXPERIMENTS.md."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.perfmodel.report import load_records, roofline_table  # noqa: E402
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+MARK = "## §Roofline — FINAL TABLES"
+
+
+def main():
+    out = [MARK, ""]
+    for mesh, title in (("pod", "Single-pod (16x16 = 256 chips)"),
+                        ("multipod", "Multi-pod (2x16x16 = 512 chips)")):
+        recs = load_records(mesh=mesh)
+        out += [f"### {title} — baseline variant", "",
+                roofline_table(recs), ""]
+    opt_dir = os.path.join(ROOT, "reports", "dryrun_opt")
+    if os.path.isdir(opt_dir):
+        recs = load_records(opt_dir, "pod")
+        if recs:
+            out += ["### Single-pod — optimized variant "
+                    "(serving layout, decode cells)", "",
+                    roofline_table(recs), ""]
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    with open(path) as f:
+        text = f.read()
+    head = text.split(MARK)[0]
+    with open(path, "w") as f:
+        f.write(head + "\n".join(out))
+    print("EXPERIMENTS.md finalized")
+
+
+if __name__ == "__main__":
+    main()

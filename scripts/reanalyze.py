@@ -1,0 +1,53 @@
+"""Re-derive roofline records from cached HLO (no recompilation).
+
+Used when the HLO cost model improves: reads the .hlo.zst cached next
+to each dry-run JSON, re-runs `hlo_cost.analyze`, and rewrites the
+roofline terms in place.
+"""
+import glob
+import json
+import os
+import sys
+
+import zstandard
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.perfmodel import hlo_cost, roofline as roof  # noqa: E402
+
+
+def reanalyze(json_path: str) -> bool:
+    hlo_path = json_path.replace(".json", ".hlo.zst")
+    if not os.path.exists(hlo_path):
+        return False
+    with open(hlo_path, "rb") as f:
+        text = zstandard.ZstdDecompressor().decompress(f.read()).decode()
+    with open(json_path) as f:
+        rec = json.load(f)
+    parsed = hlo_cost.analyze(text)
+    r = roof.make(rec["arch"], rec["shape"], rec["mesh"], rec["chips"],
+                  cost={"flops": parsed["flops"],
+                        "bytes accessed": parsed["bytes"]},
+                  collectives=parsed, model_flops=rec["model_flops"],
+                  bytes_per_device=rec["bytes_per_device"])
+    rec.update(r.as_dict())
+    rec["collectives"] = dict(bytes_by_op=parsed["bytes_by_op"],
+                              counts=parsed["counts"],
+                              total_bytes=parsed["total_bytes"])
+    with open(json_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return True
+
+
+def main():
+    root = os.path.join(os.path.dirname(__file__), "..", "reports")
+    pats = sys.argv[1:] or [os.path.join(root, "dryrun*", "*", "*.json")]
+    n = 0
+    for pat in pats:
+        for p in sorted(glob.glob(pat)):
+            if reanalyze(p):
+                n += 1
+    print(f"reanalyzed {n} records")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""minitron-8b [dense] — pruned nemotron [arXiv:2407.14679; hf].
+
+32L d_model=4096 32H (GQA kv=8) d_ff=16384 vocab=256000.
+"""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-8b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=16384, vocab=256000, d_head=128, rope_theta=1e4,
+)
+
+SMOKE = ModelConfig(
+    name="minitron-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=1,
+    d_ff=256, vocab=512, d_head=16,
+)
+
+SKIP_SHAPES = {"long_500k"}

@@ -1,0 +1,19 @@
+"""The paper's contribution: three-view memory-simulation methodology.
+
+Public API:
+
+* `StageConfig`, `run_point` — the integrated ZSim-style platform.
+* `STAGES`, `get_stage`       — the artifact's stage progression.
+* `sweep`                     — Mess bandwidth-latency characterization.
+* `make_policy`               — Ramulator/Ramulator2/DRAMsim3 flavors.
+* `reference`                 — measured Skylake ground-truth curves.
+"""
+from repro.core.backends import BACKENDS, make_policy
+from repro.core.mess import SweepResult, sweep
+from repro.core.platform import StageConfig, run_point
+from repro.core.stages import STAGES, STAGE_ORDER, get_stage
+
+__all__ = [
+    "BACKENDS", "make_policy", "SweepResult", "sweep",
+    "StageConfig", "run_point", "STAGES", "STAGE_ORDER", "get_stage",
+]

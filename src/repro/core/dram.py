@@ -1,0 +1,329 @@
+"""Cycle-accurate DRAM device + memory-controller model (the weave backend).
+
+A JAX-native reimplementation of the Ramulator-class cycle-accurate
+memory simulation used in the paper: per-bank state machines with the
+full DDR4 timing set (tRCD/tRP/tCL/tRAS/tCCD_S/L/tWTR/tRTP/tRRD/tFAW/
+tREFI/tRFC), FR-FCFS scheduling with open-page policy, watermark-based
+write draining, rank-aware bus turnaround, and per-rank refresh.
+
+Everything is vectorized over (channel, queue-slot) and
+(channel, rank*bank) so one simulated memory tick is a fixed dataflow
+graph usable inside ``jax.lax.scan`` (and batchable with ``jax.vmap``
+across sweep points).  Dynamic structures of the C++ simulators map to
+static shapes:
+
+* request queues  -> fixed-capacity slot arrays with a `valid` mask,
+* FR-FCFS         -> masked argmax over a priority score
+                     (row-hit >> activate >> precharge, oldest first),
+* FAW sliding window -> a 4-deep shift register of ACT timestamps.
+
+The same tick step has a Pallas TPU kernel twin
+(`repro.kernels.bank_timing`) for the eligibility+select hot loop; this
+module is the pure-jnp reference semantics (`ref.py` delegates here).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.timing import DramParams
+
+# command codes
+NONE, RD, WR, ACT, PRE = 0, 1, 2, 3, 4
+
+_BIG = jnp.int32(1 << 28)
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerPolicy:
+    """Backend-flavor knobs (Ramulator / Ramulator2 / DRAMsim3)."""
+
+    name: str = "ramulator"
+    # Per-channel request-slot array.  Slots double as the *staging
+    # buffer* for requests issued later in the window (entries are
+    # invisible to the scheduler until their `arrival` tick), so the
+    # depth must cover a full window of offered traffic — 23 cores x
+    # 64 req / 6 channels ~ 245 — or injection artificially caps the
+    # achieved bandwidth far below the DRAM service rate.
+    queue_depth: int = 256
+    drain_hi: int = 20             # write-drain high watermark
+    drain_lo: int = 6              # write-drain low watermark
+    row_hit_cap: int = 0           # 0 = pure FR-FCFS; >0 caps hit streaks
+    mc_extra_ticks: int = 0        # stage-10 delay buffer (MC pipe + PHY)
+
+
+class QueueState(NamedTuple):
+    """Per-channel request queue; all fields (C, Q) int32."""
+
+    valid: jnp.ndarray
+    is_write: jnp.ndarray
+    arrival: jnp.ndarray       # DRAM tick at which the request is visible
+    issue_cycle: jnp.ndarray   # CPU cycle at which the core issued it
+    fbank: jnp.ndarray         # rank*16 + bank
+    row: jnp.ndarray
+    is_chase: jnp.ndarray      # pointer-chase (latency-probe) request
+    core: jnp.ndarray          # issuing core id (for MSHR accounting)
+
+
+class BankState(NamedTuple):
+    open_row: jnp.ndarray      # (C, RB) int32, -1 = precharged
+    next_act: jnp.ndarray      # (C, RB) earliest tick for ACT
+    next_rd: jnp.ndarray       # (C, RB)
+    next_wr: jnp.ndarray       # (C, RB)
+    next_pre: jnp.ndarray      # (C, RB)
+    faw: jnp.ndarray           # (C, R, 4) last four ACT ticks, oldest first
+    next_ref: jnp.ndarray      # (C, R) next refresh deadline
+    bus_free: jnp.ndarray      # (C,) data-bus free tick
+    wtr_until: jnp.ndarray     # (C,) reads blocked until (write->read turn)
+    rtw_until: jnp.ndarray     # (C,) writes blocked until (read->write turn)
+    last_rank: jnp.ndarray     # (C,) rank of last data burst (tRTRS)
+    drain: jnp.ndarray         # (C,) bool: write-drain mode
+    hit_streak: jnp.ndarray    # (C,) consecutive row-hit grants (for cap)
+
+
+class TickStats(NamedTuple):
+    served_rd: jnp.ndarray         # scalar int32
+    served_wr: jnp.ndarray
+    sum_rd_lat_ticks: jnp.ndarray  # simulator view: completion - arrival
+    sum_if_lat_ps: jnp.ndarray     # interface view (CPU-domain), float32
+    chase_rd: jnp.ndarray
+    sum_chase_lat_ticks: jnp.ndarray
+    served_by_core: jnp.ndarray    # (N_CORES,) completions, MSHR release
+
+
+N_CORES_STAT = 24
+
+
+def init_queue(dram: DramParams, policy: SchedulerPolicy) -> QueueState:
+    C, Q = dram.n_channels, policy.queue_depth
+    z = jnp.zeros((C, Q), jnp.int32)
+    return QueueState(valid=z, is_write=z, arrival=z, issue_cycle=z,
+                      fbank=z, row=z - 1, is_chase=z, core=z)
+
+
+def init_banks(dram: DramParams) -> BankState:
+    C = dram.n_channels
+    RB = dram.banks_per_channel
+    R = dram.ranks_per_channel
+    zi = jnp.zeros((C, RB), jnp.int32)
+    return BankState(
+        open_row=zi - 1,
+        next_act=zi, next_rd=zi, next_wr=zi, next_pre=zi,
+        faw=jnp.full((C, R, 4), -(1 << 20), jnp.int32),
+        # stagger refresh deadlines across ranks like real controllers
+        next_ref=(dram.tREFI
+                  + jnp.arange(R, dtype=jnp.int32)[None, :] * (dram.tREFI // R)
+                  + jnp.zeros((C, R), jnp.int32)),
+        bus_free=jnp.zeros((C,), jnp.int32),
+        wtr_until=jnp.zeros((C,), jnp.int32),
+        rtw_until=jnp.zeros((C,), jnp.int32),
+        last_rank=jnp.zeros((C,), jnp.int32),
+        drain=jnp.zeros((C,), bool),
+        hit_streak=jnp.zeros((C,), jnp.int32),
+    )
+
+
+def _gather(bank_field, fbank):
+    """(C, RB) field gathered per queue entry -> (C, Q)."""
+    return jnp.take_along_axis(bank_field, fbank, axis=1)
+
+
+def tick(queue: QueueState, banks: BankState, t, *,
+         dram: DramParams, policy: SchedulerPolicy,
+         tick2cpu_num: int, tick2cpu_den: int, cpu_ps_per_clk: int,
+         active=True):
+    """Advance the memory system by one DRAM tick.
+
+    Returns (queue', banks', TickStats).  ``active`` gates windows whose
+    static tick budget exceeds the clock model's exact tick count.
+    """
+    C = dram.n_channels
+    RB = dram.banks_per_channel
+    nbanks = dram.banks_per_rank
+    cidx = jnp.arange(C)
+
+    # ---- refresh: close the rank and block it for tRFC --------------
+    ref_due = active & (t >= banks.next_ref)                    # (C, R)
+    rankmask = jnp.repeat(ref_due, nbanks, axis=1)              # (C, RB)
+    open_row = jnp.where(rankmask, -1, banks.open_row)
+    next_act = jnp.where(rankmask,
+                         jnp.maximum(banks.next_act, t + dram.tRFC),
+                         banks.next_act)
+    next_ref = jnp.where(ref_due, banks.next_ref + dram.tREFI, banks.next_ref)
+    banks = banks._replace(open_row=open_row, next_act=next_act,
+                           next_ref=next_ref)
+
+    # ---- write-drain hysteresis --------------------------------------
+    arrived = (queue.valid == 1) & (queue.arrival <= t)         # (C, Q)
+    nw = jnp.sum(arrived & (queue.is_write == 1), axis=1)       # (C,)
+    nr = jnp.sum(arrived & (queue.is_write == 0), axis=1)
+    drain = jnp.where(banks.drain, nw > policy.drain_lo, nw >= policy.drain_hi)
+    drain = drain | ((nr == 0) & (nw > 0))
+    banks = banks._replace(drain=drain)
+
+    # ---- per-entry eligibility ---------------------------------------
+    open_e = _gather(banks.open_row, queue.fbank)
+    nact_e = _gather(banks.next_act, queue.fbank)
+    nrd_e = _gather(banks.next_rd, queue.fbank)
+    nwr_e = _gather(banks.next_wr, queue.fbank)
+    npre_e = _gather(banks.next_pre, queue.fbank)
+    rank_e = queue.fbank // nbanks                              # (C, Q)
+
+    row_hit = open_e == queue.row
+    closed = open_e < 0
+    is_wr = queue.is_write == 1
+    bus_ok = (t >= banks.bus_free)[:, None]
+    faw_ok_rank = t >= banks.faw[:, :, 0] + dram.tFAW           # (C, R)
+    faw_ok_e = jnp.take_along_axis(faw_ok_rank, rank_e, axis=1)
+    drain_c = drain[:, None]
+
+    # During a drain the channel is dedicated to writes; outside it,
+    # to reads (standard watermark write-buffering).
+    side_ok = jnp.where(is_wr, drain_c, ~drain_c)
+    elig_rd = (arrived & ~is_wr & row_hit & (t >= nrd_e) & bus_ok
+               & (t >= banks.wtr_until)[:, None] & ~drain_c)
+    elig_wr = (arrived & is_wr & row_hit & (t >= nwr_e) & bus_ok
+               & (t >= banks.rtw_until)[:, None] & drain_c)
+    elig_act = arrived & closed & (t >= nact_e) & faw_ok_e & side_ok
+
+    # FR-FCFS guard: don't precharge a row that still has pending hits
+    # *on the active side* — during a write drain only write hits count
+    # (a pending read hit must not block the drain's precharges, or the
+    # drain can never finish and the channel deadlocks).
+    hit_pend = jnp.zeros((C, RB), bool).at[cidx[:, None], queue.fbank].max(
+        arrived & row_hit & (is_wr == drain_c))
+    hit_pend_e = _gather(hit_pend, queue.fbank)
+    elig_pre = (arrived & ~closed & ~row_hit & (t >= npre_e)
+                & ~hit_pend_e & side_ok)
+
+    # ---- FR-FCFS priority: CAS > ACT > PRE, oldest-first --------------
+    age = _BIG - queue.arrival
+    score = jnp.where(elig_rd | elig_wr, 3 * _BIG + age,
+             jnp.where(elig_act, 2 * _BIG + age,
+              jnp.where(elig_pre, 1 * _BIG + age, 0)))
+    if policy.row_hit_cap > 0:
+        # Ramulator2-style starvation cap: after `cap` consecutive CAS
+        # grants, age wins over row-hit priority.
+        capped = (banks.hit_streak >= policy.row_hit_cap)[:, None]
+        score = jnp.where(capped & (elig_rd | elig_wr), 1 * _BIG + age, score)
+        score = jnp.where(capped & elig_act, 3 * _BIG + age, score)
+    score = jnp.where(active, score, 0)
+
+    sel = jnp.argmax(score, axis=1)                             # (C,)
+    sel_score = jnp.take_along_axis(score, sel[:, None], 1)[:, 0]
+    any_cmd = sel_score > 0
+
+    def pick(field):
+        return jnp.take_along_axis(field, sel[:, None], 1)[:, 0]
+
+    s_fb = pick(queue.fbank)
+    s_row = pick(queue.row)
+    s_arr = pick(queue.arrival)
+    s_issue = pick(queue.issue_cycle)
+    s_core = pick(queue.core)
+    s_rank = s_fb // nbanks
+    s_bg = (s_fb % nbanks) >> 2
+    s_iswr = pick(is_wr.astype(jnp.int32)) == 1
+    s_chase = pick(queue.is_chase) == 1
+    s_rd_ok = pick(elig_rd.astype(jnp.int32)) == 1
+    s_wr_ok = pick(elig_wr.astype(jnp.int32)) == 1
+    s_act_ok = pick(elig_act.astype(jnp.int32)) == 1
+    s_pre_ok = pick(elig_pre.astype(jnp.int32)) == 1
+    if policy.row_hit_cap > 0:
+        capped1 = banks.hit_streak >= policy.row_hit_cap
+        # under the cap inversion an ACT can outrank CAS; recompute cmd
+        s_cas = any_cmd & (s_rd_ok | s_wr_ok) & ~(capped1 & s_act_ok)
+        s_act = any_cmd & s_act_ok & ~s_cas
+    else:
+        s_cas = any_cmd & (s_rd_ok | s_wr_ok)
+        s_act = any_cmd & s_act_ok & ~s_cas
+    s_pre = any_cmd & s_pre_ok & ~s_cas & ~s_act
+    s_rd = s_cas & ~s_iswr
+    s_wr = s_cas & s_iswr
+
+    # ---- apply the selected command per channel ----------------------
+    bsel = (cidx, s_fb)
+
+    # ACT
+    grp = (jnp.arange(RB) % nbanks) >> 2                        # (RB,)
+    same_rank = (jnp.arange(RB) // nbanks)[None, :] == s_rank[:, None]
+    same_grp = (grp[None, :] == s_bg[:, None]) & same_rank
+    open_row = banks.open_row.at[bsel].set(
+        jnp.where(s_act, s_row, banks.open_row[bsel]))
+    nact = jnp.where(s_act[:, None] & same_rank,
+                     jnp.maximum(banks.next_act, t + dram.tRRD_S),
+                     banks.next_act)
+    nact = jnp.where(s_act[:, None] & same_grp,
+                     jnp.maximum(nact, t + dram.tRRD_L), nact)
+    nact = nact.at[bsel].set(
+        jnp.where(s_act, jnp.maximum(nact[bsel], t + dram.tRC), nact[bsel]))
+    nrd = banks.next_rd.at[bsel].set(
+        jnp.where(s_act, t + dram.tRCD, banks.next_rd[bsel]))
+    nwr = banks.next_wr.at[bsel].set(
+        jnp.where(s_act, t + dram.tRCD, banks.next_wr[bsel]))
+    npre = banks.next_pre.at[bsel].set(
+        jnp.where(s_act, t + dram.tRAS, banks.next_pre[bsel]))
+    # FAW shift-register push
+    faw_new = jnp.concatenate(
+        [banks.faw[:, :, 1:], jnp.full_like(banks.faw[:, :, :1], t)], axis=2)
+    act_rank = jax.nn.one_hot(s_rank, dram.ranks_per_channel,
+                              dtype=bool) & s_act[:, None]
+    faw = jnp.where(act_rank[:, :, None], faw_new, banks.faw)
+
+    # CAS (RD/WR): bus + tCCD (bank-group aware, channel-wide) + turnaround
+    rank_switch = s_rank != banks.last_rank
+    burst = dram.tBL + jnp.where(rank_switch, dram.tRTRS, 0)
+    bus_free = jnp.where(s_cas, t + burst, banks.bus_free)
+    last_rank = jnp.where(s_cas, s_rank, banks.last_rank)
+    ccd = jnp.where(same_grp, dram.tCCD_L, dram.tCCD_S)
+    nrd = jnp.where(s_cas[:, None], jnp.maximum(nrd, t + ccd), nrd)
+    nwr = jnp.where(s_cas[:, None], jnp.maximum(nwr, t + ccd), nwr)
+    npre = npre.at[bsel].set(jnp.where(
+        s_rd, jnp.maximum(npre[bsel], t + dram.tRTP),
+        jnp.where(s_wr, jnp.maximum(npre[bsel],
+                                    t + dram.tCWL + dram.tBL + dram.tWR),
+                  npre[bsel])))
+    wtr_until = jnp.where(s_wr, t + dram.tCWL + dram.tBL + dram.tWTR_L,
+                          banks.wtr_until)
+    rtw_until = jnp.where(s_rd, t + dram.tCL + dram.tBL + dram.tRTRS
+                          - dram.tCWL, banks.rtw_until)
+
+    # PRE
+    open_row = open_row.at[bsel].set(
+        jnp.where(s_pre, -1, open_row[bsel]))
+    nact = nact.at[bsel].set(
+        jnp.where(s_pre, jnp.maximum(nact[bsel], t + dram.tRP), nact[bsel]))
+
+    hit_streak = jnp.where(s_cas, banks.hit_streak + 1,
+                           jnp.where(any_cmd, 0, banks.hit_streak))
+
+    banks = BankState(open_row=open_row, next_act=nact, next_rd=nrd,
+                      next_wr=nwr, next_pre=npre, faw=faw, next_ref=next_ref,
+                      bus_free=bus_free, wtr_until=wtr_until,
+                      rtw_until=rtw_until, last_rank=last_rank,
+                      drain=drain, hit_streak=hit_streak)
+
+    # retire CAS'd entries
+    served = jnp.zeros_like(queue.valid).at[cidx, sel].set(
+        s_cas.astype(jnp.int32))
+    queue = queue._replace(valid=queue.valid & (1 - served))
+
+    # ---- stats --------------------------------------------------------
+    done_t = t + dram.tCL + dram.tBL + policy.mc_extra_ticks
+    rd_lat = done_t - s_arr                                     # ticks
+    if_lat_ps = (done_t * tick2cpu_num // tick2cpu_den
+                 - s_issue * cpu_ps_per_clk).astype(jnp.float32)
+    stats = TickStats(
+        served_rd=jnp.sum(s_rd.astype(jnp.int32)),
+        served_wr=jnp.sum(s_wr.astype(jnp.int32)),
+        sum_rd_lat_ticks=jnp.sum(jnp.where(s_rd, rd_lat, 0)),
+        sum_if_lat_ps=jnp.sum(jnp.where(s_rd, if_lat_ps, 0.0)),
+        chase_rd=jnp.sum((s_rd & s_chase).astype(jnp.int32)),
+        sum_chase_lat_ticks=jnp.sum(jnp.where(s_rd & s_chase, rd_lat, 0)),
+        served_by_core=jnp.zeros((N_CORES_STAT,), jnp.int32).at[s_core].add(
+            s_cas.astype(jnp.int32), mode="drop"),
+    )
+    return queue, banks, stats

@@ -1,0 +1,120 @@
+"""Mess-style bandwidth-latency characterization (paper Sec. 2, Fig. 2-7).
+
+The Mess benchmark [5] profiles a memory system as a *family of
+bandwidth-latency curves*: for each read/write traffic mix, sweep the
+injected bandwidth from unloaded to saturation and record the latency a
+pointer-chase probe observes.  Every figure in the paper is such a
+sweep evaluated at one simulation stage, plotted from each of the three
+views.
+
+This module drives `platform.run_point` over the (pace x write-mix)
+grid.  Pace points are `vmap`-ed — one XLA program simulates the whole
+curve — and write mixes iterate in Python (they change traffic shape,
+not shapes of arrays, but keeping the grid 1-D per compile keeps XLA
+compile time low and matches how Mess runs on real hardware: one
+process per mix).
+
+Outputs are plain numpy arrays, written as CSV by the benchmark harness
+in the artifact's `bandwidth_latency.csv` format.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.platform import StageConfig, run_point
+
+#: write-fraction numerators out of 64 -> read fractions 100..50%
+#: (Mess plots 100%-read lightest to 50%-read darkest).
+WRITE_MIXES = (0, 8, 16, 24, 32)
+#: demand requests per traffic core per window; 23 traffic cores,
+#: 64 B lines, 1000 cycles at 2.1 GHz => pace 64 ~ 198 GB/s offered.
+DEFAULT_PACES = (1, 2, 4, 6, 8, 12, 16, 20, 24, 28, 32, 40, 48, 64)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    """One stage's Mess characterization, all three views."""
+
+    stage: str
+    write_mixes: tuple
+    paces: tuple
+    # each (n_mixes, n_paces) float arrays
+    sim_bw: np.ndarray
+    sim_lat: np.ndarray
+    if_bw: np.ndarray
+    if_lat: np.ndarray
+    app_bw: np.ndarray
+    app_lat: np.ndarray
+    chase_lat: np.ndarray
+
+    def view(self, which: str):
+        """(bw GB/s, lat ns) arrays for 'sim' | 'if' | 'app'."""
+        return (getattr(self, f"{which}_bw"), getattr(self, f"{which}_lat"))
+
+    def read_fraction(self, i: int) -> float:
+        return 1.0 - self.write_mixes[i] / 64.0
+
+    def to_rows(self):
+        """Rows in the artifact's bandwidth_latency.csv format."""
+        rows = []
+        for i, wr in enumerate(self.write_mixes):
+            for j, pace in enumerate(self.paces):
+                rows.append(dict(
+                    stage=self.stage, read_pct=round(100 * (1 - wr / 64)),
+                    pace=pace,
+                    sim_bw_gbs=self.sim_bw[i, j], sim_lat_ns=self.sim_lat[i, j],
+                    if_bw_gbs=self.if_bw[i, j], if_lat_ns=self.if_lat[i, j],
+                    app_bw_gbs=self.app_bw[i, j], app_lat_ns=self.app_lat[i, j],
+                ))
+        return rows
+
+
+@functools.lru_cache(maxsize=None)
+def _sweep_fn(cfg: StageConfig):
+    """One compiled program: vmap over pace points for a fixed mix."""
+    return jax.jit(jax.vmap(lambda p, w: run_point(cfg, p, w),
+                            in_axes=(0, None)))
+
+
+def sweep(cfg: StageConfig, paces=DEFAULT_PACES,
+          write_mixes=WRITE_MIXES) -> SweepResult:
+    """Run the Mess characterization of one simulation stage."""
+    fn = _sweep_fn(cfg)
+    pace_v = jnp.asarray(paces, jnp.int32)
+    acc = {k: [] for k in ("sim_bw", "sim_lat", "if_bw", "if_lat",
+                           "app_bw", "app_lat", "chase_lat")}
+    for wr in write_mixes:
+        out = jax.device_get(fn(pace_v, jnp.int32(wr)))
+        acc["sim_bw"].append(out["sim_bw_gbs"])
+        acc["sim_lat"].append(out["sim_lat_ns"])
+        acc["if_bw"].append(out["if_bw_gbs"])
+        acc["if_lat"].append(out["if_lat_ns"])
+        acc["app_bw"].append(out["app_bw_gbs"])
+        acc["app_lat"].append(out["app_lat_ns"])
+        acc["chase_lat"].append(out["chase_lat_ns"])
+    return SweepResult(
+        stage=cfg.name, write_mixes=tuple(write_mixes), paces=tuple(paces),
+        **{k: np.stack(v) for k, v in acc.items()})
+
+
+def unloaded_latency_ns(res: SweepResult, view: str = "app") -> float:
+    """Latency of the lowest-bandwidth 100%-read point."""
+    _, lat = res.view(view)
+    return float(lat[0, 0])
+
+
+def max_bandwidth_gbs(res: SweepResult, view: str = "app",
+                      mix_index: int = 0) -> float:
+    bw, _ = res.view(view)
+    return float(np.max(bw[mix_index]))
+
+
+def saturated_latency_ns(res: SweepResult, view: str = "app",
+                         mix_index: int = 0) -> float:
+    bw, lat = res.view(view)
+    return float(lat[mix_index, int(np.argmax(bw[mix_index]))])

@@ -1,0 +1,81 @@
+"""Network-on-chip models (paper Sec. 4, Fig. 6b).
+
+The baseline platform folds the NOC into a fixed delay inside the LLC
+latency.  The enhanced model is a Skylake-like 2-D mesh: cores and LLC
+slices live on tiles of a 6x4 mesh (matching the 24-core Skylake die
+layout reverse-engineered in [17]/[19]); the two integrated memory
+controllers sit on opposite die edges [18].  A request traverses
+
+    core tile -> LLC slice tile (address-hashed) -> IMC edge tile
+
+and the response returns.  With 2 cycles/hop (1 link + 1 router stage
+at 2.1 GHz) the average extra round trip over the baseline's fixed
+delay is ~21 CPU cycles = 10 ns, matching the paper's measurement
+(with ~4 core cycles per hop, i.e. McCalpin's ~1.9 ns/hop).
+
+The model is evaluated *analytically* (expected hop counts over the
+uniform LLC-slice hash), which is exact for Mess traffic: its address
+streams hash uniformly across slices.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+import numpy as np
+
+MESH_COLS = 6
+MESH_ROWS = 4
+# Effective core cycles per mesh hop (link + router + slice ingress) at
+# 2.1 GHz.  McCalpin's Skylake-SP measurements put a hop at ~1.9 ns,
+# i.e. ~4 core cycles (the mesh runs in the slower uncore domain).
+CYCLES_PER_HOP = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class NocModel:
+    kind: str                 # "fixed" | "mesh"
+    req_cycles: int           # extra request-path cycles vs. baseline
+    resp_cycles: int          # extra response-path cycles vs. baseline
+
+    @property
+    def round_trip_cycles(self) -> int:
+        return self.req_cycles + self.resp_cycles
+
+
+def _tiles():
+    return list(itertools.product(range(MESH_ROWS), range(MESH_COLS)))
+
+
+def _manhattan(a, b):
+    return abs(a[0] - b[0]) + abs(a[1] - b[1])
+
+
+def mesh_hop_stats() -> dict:
+    """Expected hop counts for core->slice->IMC->core paths."""
+    tiles = _tiles()
+    # IMCs on the east/west die edges, middle rows (Skylake-SP layout)
+    imcs = [(1, 0), (2, MESH_COLS - 1)]
+    h_cs = np.mean([_manhattan(c, s) for c in tiles for s in tiles])
+    h_sm = np.mean([min(_manhattan(s, m) for m in imcs) for s in tiles])
+    h_mc = np.mean([min(_manhattan(m, c) for m in imcs) for c in tiles])
+    return dict(core_to_slice=h_cs, slice_to_imc=h_sm, imc_to_core=h_mc)
+
+
+def make_noc(kind: str) -> NocModel:
+    if kind == "fixed":
+        # the baseline's fixed delay is already inside the LLC latency
+        return NocModel("fixed", 0, 0)
+    if kind == "mesh":
+        h = mesh_hop_stats()
+        req = round((h["core_to_slice"] + h["slice_to_imc"])
+                    * CYCLES_PER_HOP)
+        resp = round(h["imc_to_core"] * CYCLES_PER_HOP)
+        # subtract the fixed delay the baseline already charges
+        baseline_rt = 10
+        extra = max(req + resp - baseline_rt, 0)
+        return NocModel("mesh",
+                        req_cycles=int(round(extra * (req / (req + resp)))),
+                        resp_cycles=int(extra
+                                        - round(extra * (req / (req + resp)))))
+    raise ValueError(f"unknown NOC kind {kind!r}")

@@ -1,0 +1,216 @@
+"""The integrated simulation platform: bound/weave windows + interface.
+
+This is the JAX equivalent of ZSim (event-based CPU frontend) connected
+to a cycle-accurate memory simulator through the CPU-memory interface —
+the structure of Fig. 1.  One `run_point` simulates the platform for a
+fixed number of 1000-cycle ZSim windows at one Mess operating point
+(pace, read/write mix) and returns the three memory-performance views.
+
+Per window:
+
+1. **Bound phase** (`workload.generate`): every core's memory requests
+   are generated against the *immediate-response* latency.  In the
+   DAMOV baseline this latency is one CPU cycle; with the paper's
+   correction it is the PI-controlled estimate (Sec. 3.4).
+2. **Interface** (`workload.inject` + `clocking`): requests cross the
+   CPU->memory clock domain under the selected clocking model
+   (broken / integer-ratio / picosecond).
+3. **Weave phase** (`dram.tick` scan): the cycle-accurate backend
+   processes the window's DRAM ticks; completion statistics feed the
+   memory-simulator and interface views.
+4. **PI update**: the immediate-response latency for the next window is
+   0.95*previous + 0.05*(average weave latency) — paper Sec. 3.4.
+
+The decoupling bug is inherent to the structure (as in ZSim): the app
+view's load-to-use latency is `cache_path + immediate_response`, fixed
+at bound-phase time, regardless of what the weave phase later computes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dram, workload
+from repro.core.clocking import ClockModel, make_clock
+from repro.core.dram import SchedulerPolicy
+from repro.core.noc import NocModel, make_noc
+from repro.core.timing import PlatformParams, DEFAULT_PLATFORM
+from repro.core.workload import WorkloadConfig
+
+PI_KEEP = 0.95       # paper: 95% previous estimate
+PI_BLEND = 0.05      # paper: 5% new cycle-accurate average
+
+
+@dataclasses.dataclass(frozen=True)
+class StageConfig:
+    """Full static configuration of one simulation stage."""
+
+    name: str = "01-baseline"
+    clock_mode: str = "broken_noscale"
+    mapping: str = "simple"
+    pi_latency: bool = False          # stage 04 model correction
+    noc: str = "fixed"                # stage 06
+    prefetch: bool = False            # stage 07
+    policy: SchedulerPolicy = dataclasses.field(default_factory=SchedulerPolicy)
+    l_ir_init_cycles: float = 1.0     # DAMOV immediate-response latency
+    windows: int = 96
+    warmup: int = 32
+    platform: PlatformParams = dataclasses.field(
+        default_factory=lambda: DEFAULT_PLATFORM)
+
+    def clock(self) -> ClockModel:
+        return make_clock(self.clock_mode, self.platform)
+
+    def noc_model(self) -> NocModel:
+        return make_noc(self.noc)
+
+    def workload_config(self) -> WorkloadConfig:
+        n = self.noc_model()
+        return WorkloadConfig(
+            mapping=self.mapping, prefetch=self.prefetch,
+            cache_path_cycles=self.platform.cpu.cache_path_cycles,
+            noc_req_cycles=n.req_cycles, noc_resp_cycles=n.resp_cycles)
+
+
+class WindowOut(NamedTuple):
+    served_rd: jnp.ndarray
+    served_wr: jnp.ndarray
+    sum_rd_lat_ticks: jnp.ndarray
+    sum_if_lat_ps: jnp.ndarray
+    chase_rd: jnp.ndarray
+    sum_chase_lat_ticks: jnp.ndarray
+    app_lat_cycles: jnp.ndarray     # bound-phase load-to-use (app view)
+    l_ir: jnp.ndarray
+    injected: jnp.ndarray
+    ticks: jnp.ndarray
+
+
+def _window_step(cfg: StageConfig, clock: ClockModel, wcfg: WorkloadConfig,
+                 pace, wr_num, carry, w):
+    queue, banks, cores, l_ir, lat_est = carry
+    cpu = cfg.platform.cpu
+    l_ir_cycles = jnp.maximum(jnp.round(l_ir).astype(jnp.int32), 1)
+    window_ps = cpu.window_cycles * cpu.cpu_ps_per_clk
+
+    # bound phase + interface hand-off (MSHR closed-loop budget)
+    budget = workload.littles_law_budget(lat_est, window_ps)
+    cand, aux = workload.generate(cores, pace, wr_num, l_ir_cycles, wcfg,
+                                  cpu.window_cycles, budget)
+    queue, cores, injected = workload.inject(queue, cand, aux, cores,
+                                             clock, w, wcfg)
+
+    # weave phase: cycle-accurate DRAM simulation of this window's ticks
+    start = clock.window_start_tick(w)
+    end = clock.window_end_tick(w)
+    tick_fn = functools.partial(
+        dram.tick, dram=cfg.platform.dram, policy=cfg.policy,
+        tick2cpu_num=clock.tick_to_cpu_ps_num,
+        tick2cpu_den=clock.tick_to_cpu_ps_den,
+        cpu_ps_per_clk=cpu.cpu_ps_per_clk)
+
+    def body(qb, i):
+        q, b = qb
+        t = start + i
+        q, b, st = tick_fn(q, b, t, active=t < end)
+        return (q, b), st
+
+    (queue, banks), st = jax.lax.scan(
+        body, (queue, banks),
+        jnp.arange(clock.ticks_per_window_static, dtype=jnp.int32))
+
+    n_rd = jnp.sum(st.served_rd)
+    sum_if = jnp.sum(st.sum_if_lat_ps)
+
+    # Closed-loop latency estimate for the next window's MSHR budget:
+    # load-to-use ~ cache path + weave round trip (sim domain).
+    lat_w = (jnp.sum(st.sum_rd_lat_ticks) / jnp.maximum(n_rd, 1)
+             * cfg.platform.dram.dram_ps_per_clk
+             + wcfg.cache_path_cycles * cpu.cpu_ps_per_clk)
+    lat_est = jnp.where(n_rd > 0, 0.5 * lat_est + 0.5 * lat_w, lat_est)
+
+    # PI controller (Sec. 3.4): blend in the weave-phase average latency
+    avg_if_cycles = sum_if / (cpu.cpu_ps_per_clk * jnp.maximum(n_rd, 1))
+    l_ir_next = jnp.where(
+        jnp.logical_and(cfg.pi_latency, n_rd > 0),
+        PI_KEEP * l_ir + PI_BLEND * avg_if_cycles, l_ir)
+
+    noc_rt = wcfg.noc_req_cycles + wcfg.noc_resp_cycles
+    app_lat_cycles = (wcfg.cache_path_cycles + noc_rt
+                      + l_ir_cycles).astype(jnp.float32)
+
+    out = WindowOut(
+        served_rd=n_rd, served_wr=jnp.sum(st.served_wr),
+        sum_rd_lat_ticks=jnp.sum(st.sum_rd_lat_ticks),
+        sum_if_lat_ps=sum_if,
+        chase_rd=jnp.sum(st.chase_rd),
+        sum_chase_lat_ticks=jnp.sum(st.sum_chase_lat_ticks),
+        app_lat_cycles=app_lat_cycles, l_ir=l_ir_next,
+        injected=injected, ticks=end - start)
+    return (queue, banks, cores, l_ir_next, lat_est), out
+
+
+def run_point(cfg: StageConfig, pace, wr_num):
+    """Simulate one Mess operating point; returns the three views.
+
+    pace:   requests / traffic core / window (int32, traced — vmap-able)
+    wr_num: write-fraction numerator out of 64 (int32, traced)
+    """
+    clock = cfg.clock()
+    wcfg = cfg.workload_config()
+    queue = dram.init_queue(cfg.platform.dram, cfg.policy)
+    banks = dram.init_banks(cfg.platform.dram)
+    cores = workload.init_cores()
+    l_ir0 = jnp.asarray(cfg.l_ir_init_cycles, jnp.float32)
+    # optimistic unloaded estimate; the EMA converges within warmup
+    lat_est0 = jnp.asarray(
+        (cfg.platform.cpu.cache_path_cycles
+         * cfg.platform.cpu.cpu_ps_per_clk)
+        + (cfg.platform.dram.tCL + cfg.platform.dram.tBL)
+        * cfg.platform.dram.dram_ps_per_clk, jnp.float32)
+
+    step = functools.partial(_window_step, cfg, clock, wcfg, pace, wr_num)
+    _, outs = jax.lax.scan(step, (queue, banks, cores, l_ir0, lat_est0),
+                           jnp.arange(cfg.windows, dtype=jnp.int32))
+
+    # aggregate post-warmup
+    keep = jnp.arange(cfg.windows) >= cfg.warmup
+    def ksum(x):
+        return jnp.sum(jnp.where(keep, x, 0))
+    line = cfg.platform.dram.line_bytes
+    cpu = cfg.platform.cpu
+
+    n_rd = ksum(outs.served_rd)
+    n_wr = ksum(outs.served_wr)
+    bytes_served = (n_rd + n_wr).astype(jnp.float32) * line
+    ticks = ksum(outs.ticks).astype(jnp.float32)
+    cpu_ps = (jnp.sum(keep) * cpu.window_cycles
+              * cpu.cpu_ps_per_clk).astype(jnp.float32)
+    sim_ps = ticks * cfg.platform.dram.dram_ps_per_clk
+
+    nz = jnp.maximum(n_rd, 1).astype(jnp.float32)
+    # bytes/ps -> GB/s is a factor of 1e3 (1e12 ps/s over 1e9 B/GB)
+    return dict(
+        # ① memory-simulator view (DRAM's own clock domain, from the MC)
+        sim_bw_gbs=bytes_served / sim_ps * 1e3,
+        sim_lat_ns=ksum(outs.sum_rd_lat_ticks).astype(jnp.float32)
+            * (cfg.platform.dram.dram_ps_per_clk * 1e-3) / nz,
+        # ② memory-interface view (CPU-perceived clock domain)
+        if_bw_gbs=bytes_served / cpu_ps * 1e3,
+        if_lat_ns=ksum(outs.sum_if_lat_ps) * 1e-3 / nz,
+        # ③ application view (bound-phase load-to-use; the outcome)
+        app_bw_gbs=bytes_served / cpu_ps * 1e3,
+        app_lat_ns=jnp.sum(jnp.where(keep, outs.app_lat_cycles, 0.0))
+            / jnp.maximum(jnp.sum(keep), 1)
+            * (cpu.cpu_ps_per_clk * 1e-3),
+        # diagnostics
+        n_rd=n_rd, n_wr=n_wr,
+        l_ir_final=outs.l_ir[-1],
+        chase_lat_ns=ksum(outs.sum_chase_lat_ticks).astype(jnp.float32)
+            * (cfg.platform.dram.dram_ps_per_clk * 1e-3)
+            / jnp.maximum(ksum(outs.chase_rd), 1).astype(jnp.float32),
+        injected=ksum(outs.injected),
+    )

@@ -1,0 +1,257 @@
+"""Mess-style workload generation and request injection (bound phase).
+
+The paper profiles every simulation stage with the Mess benchmark [5]:
+N-1 *traffic-generator* cores sweep the used bandwidth (at a controlled
+pace and read/write mix) while one *pointer-chase* core measures the
+load-to-use latency.  This module generates, per ZSim window, the
+candidate memory requests of all cores and injects them into the
+per-channel controller queues.
+
+Bound-phase semantics (Sec. 3.3) are preserved exactly: issue cycles
+are computed against the *immediate-response* latency (1 CPU cycle in
+the DAMOV baseline, PI-controlled after stage 04) — once a request is
+handed to the memory simulator its issue time can no longer be
+adjusted, which is precisely the decoupling bug the paper analyzes.
+
+Abstractions (documented deviations from the C++ platform, all on the
+traffic-generator side only):
+
+* Traffic streams are segmented sequential runs (64 lines) with hashed
+  segment placement — the access pattern of Mess's generator loops.
+* When a channel queue is full, excess candidates are counted into a
+  per-core backlog (pressure is preserved; the skipped generator
+  addresses are not replayed — statistically equivalent for streaming
+  traffic, and the latency probe is never dropped).
+* The stride prefetcher (stage 07) is modeled at the traffic cores:
+  degree-8 overfetch past segment boundaries plus next-segment
+  misprediction, i.e. extra read traffic that does not serve demands.
+  The pointer-chase core has no detectable stride, so — like on real
+  hardware — it receives no prefetches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import addrmap
+from repro.core.dram import QueueState
+
+N_CORES = 24
+N_TRAFFIC = 23
+CHASE_CORE = 23
+CAP_DEMAND = 64            # max demand candidates / core / window
+CAP_PF = 16                # max prefetch candidates / core / window
+CAND = CAP_DEMAND + CAP_PF
+SEGMENT_LINES = 64         # traffic stream segment length
+BACKLOG_MAX = 192
+CHASE_REGION_BITS = 26     # 4 GB pointer-chase region
+#: Per-core outstanding-miss bound (Skylake L2 superqueue).  Makes the
+#: traffic generators *closed-loop* like real cores: a core can have at
+#: most this many lines in flight, so offered load self-throttles as
+#: the memory system saturates (bounding queue delay exactly as finite
+#: MSHRs do on hardware) instead of growing without bound.
+MSHR_CAP = 24
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadConfig:
+    mapping: str = "simple"
+    prefetch: bool = False
+    pf_shift: int = 2          # extra pf traffic = quota >> pf_shift (25%)
+    cache_path_cycles: int = 50
+    noc_req_cycles: int = 0    # extra request-path NOC cycles (stage 06)
+    noc_resp_cycles: int = 0
+
+
+class CoreState(NamedTuple):
+    seq: jnp.ndarray           # (24,) per-core stream position
+    backlog: jnp.ndarray       # (24,) pending ungranted demand
+    chase_carry: jnp.ndarray   # leftover CPU cycles of the chase loop
+
+
+def init_cores() -> CoreState:
+    return CoreState(seq=jnp.zeros((N_CORES,), jnp.int32),
+                     backlog=jnp.zeros((N_CORES,), jnp.int32),
+                     chase_carry=jnp.zeros((), jnp.int32))
+
+
+def littles_law_budget(lat_est_ps, window_ps) -> jnp.ndarray:
+    """Per-core per-window demand budget from the MSHR closed loop.
+
+    A core with ``MSHR_CAP`` in-flight lines at observed memory latency
+    ``lat_est_ps`` sustains ``MSHR_CAP / lat`` lines per picosecond
+    (Little's law) — per window that is ``MSHR_CAP * window / lat``.
+    This is the per-window formulation of finite MSHRs: offered load
+    self-throttles as latency grows, exactly like real closed-loop
+    cores, which bounds queue delay at saturation.
+    """
+    return jnp.maximum(
+        (MSHR_CAP * window_ps / jnp.maximum(lat_est_ps, 1.0)), 1.0
+    ).astype(jnp.int32)
+
+
+def _lcg(x):
+    x = x.astype(jnp.uint32)
+    return x * jnp.uint32(2654435761) + jnp.uint32(0x9E3779B9)
+
+
+def _segment_line(core, k):
+    """Traffic stream: 64-line sequential segments at hashed bases."""
+    seg = (k >> 6).astype(jnp.uint32)
+    h = _lcg(seg * jnp.uint32(31) + core.astype(jnp.uint32) * jnp.uint32(97))
+    base = (core.astype(jnp.uint32) << 22)
+    return base | ((h & jnp.uint32(0xFFFF)) << 6) | (k.astype(jnp.uint32) & 63)
+
+
+def _chase_line(k):
+    h = _lcg(_lcg(k.astype(jnp.uint32)))
+    return (jnp.uint32(1) << 31) | (h >> (32 - CHASE_REGION_BITS) << 0)
+
+
+class Candidates(NamedTuple):
+    """(24, CAND) candidate requests for one window."""
+
+    valid: jnp.ndarray
+    line: jnp.ndarray          # uint32 cache-line index
+    is_write: jnp.ndarray
+    issue_cycle: jnp.ndarray   # within-window CPU cycle
+    is_chase: jnp.ndarray
+    is_pf: jnp.ndarray         # speculative prefetch (not demand)
+
+
+def generate(cores: CoreState, pace, wr_num, l_ir_cycles,
+             cfg: WorkloadConfig, window_cycles: int = 1000,
+             budget=CAP_DEMAND):
+    """Bound phase: all cores' candidate requests for one window.
+
+    pace:    int32 — demand requests per traffic core per window.
+    wr_num:  int32 — write fraction numerator (den=64).
+    l_ir_cycles: int32 — current immediate-response latency.
+    budget:  int32 — MSHR closed-loop cap (`littles_law_budget`).
+    Returns (Candidates, new CoreState aux, chase_iters, iter_cycles).
+    """
+    cid = jnp.arange(N_CORES, dtype=jnp.int32)[:, None]       # (24,1)
+    j = jnp.arange(CAND, dtype=jnp.int32)[None, :]            # (1,CAND)
+    is_traffic = cid < N_TRAFFIC
+
+    # ---- traffic demand ------------------------------------------------
+    # Closed loop: per-window demand capped by the MSHR budget.
+    want = pace + cores.backlog                                # (24,)
+    quota = jnp.minimum(jnp.minimum(CAP_DEMAND, want),
+                        budget)[..., None]                     # (24,1)
+    k = cores.seq[:, None] + j                                 # (24,CAND)
+    t_valid = is_traffic & (j < quota)
+    t_line = _segment_line(cid, k)
+    # deterministic write interleave at rate wr_num/64
+    t_write = ((k + 1) * wr_num) // 64 - (k * wr_num) // 64 > 0
+    t_issue = j * window_cycles // jnp.maximum(quota, 1)
+
+    # ---- stride-prefetcher extra traffic (stage 07) ---------------------
+    pf_valid = jnp.zeros_like(t_valid)
+    if cfg.prefetch:
+        pf_quota = jnp.minimum(CAP_PF, quota[..., 0] >> cfg.pf_shift)[:, None]
+        jp = j - CAP_DEMAND
+        pf_valid = is_traffic & (jp >= 0) & (jp < pf_quota)
+        pf_line = _segment_line(cid, cores.seq[:, None] + quota + jp)
+        t_valid = t_valid | pf_valid
+        t_line = jnp.where(pf_valid, pf_line, t_line)
+        t_write = t_write & ~pf_valid
+        t_issue = jnp.where(
+            pf_valid, jp * window_cycles // jnp.maximum(pf_quota, 1), t_issue)
+
+    # ---- pointer chase (the latency probe) ------------------------------
+    # One outstanding load at a time; in the bound phase the next load
+    # issues after cache-path + immediate-response cycles (the ZSim
+    # two-phase semantics the paper corrects).
+    noc_rt = cfg.noc_req_cycles + cfg.noc_resp_cycles
+    iter_cycles = jnp.maximum(
+        cfg.cache_path_cycles + noc_rt + l_ir_cycles, 1)
+    budget = window_cycles + cores.chase_carry
+    chase_iters = jnp.minimum(CAND, budget // iter_cycles)
+    chase_carry = budget - chase_iters * iter_cycles
+    c_valid = (cid == CHASE_CORE) & (j < chase_iters)
+    c_line = _chase_line(cores.seq[CHASE_CORE] + j)
+    c_issue = j * iter_cycles
+
+    cand = Candidates(
+        valid=(t_valid & is_traffic) | c_valid,
+        line=jnp.where(is_traffic, t_line, c_line),
+        is_write=jnp.where(is_traffic, t_write, False),
+        issue_cycle=jnp.where(is_traffic, t_issue, c_issue).astype(jnp.int32),
+        is_chase=c_valid,
+        is_pf=pf_valid & is_traffic,
+    )
+    aux = dict(quota=quota[..., 0], want=want, chase_iters=chase_iters,
+               chase_carry=chase_carry, iter_cycles=iter_cycles)
+    return cand, aux
+
+
+def inject(queue: QueueState, cand: Candidates, aux, cores: CoreState,
+           clock, w, cfg: WorkloadConfig):
+    """Scatter candidates into per-channel queue slots (bounded admit).
+
+    Admission is chase-first then issue-order round-robin; rejected
+    demand goes to the per-core backlog.  Returns (queue', CoreState').
+    """
+    C, Q = queue.valid.shape
+    n = N_CORES * CAND
+    flat = jax.tree_util.tree_map(lambda a: a.reshape(n), cand)
+    core_of = jnp.repeat(jnp.arange(N_CORES, dtype=jnp.int32), CAND)
+
+    dec = addrmap.decode(flat.line, cfg.mapping)
+    ch = jnp.where(flat.valid, dec.channel, C)        # invalid -> ch C
+    # admission key: chase first, then issue order, then core id
+    key = ((1 - flat.is_chase.astype(jnp.int32)) * (1 << 24)
+           + flat.issue_cycle * 32 + core_of % 32)
+    order = jnp.argsort(ch * (1 << 26) + key)
+    ch_s = ch[order]
+
+    counts = jnp.bincount(ch_s, length=C + 1)
+    start = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                             jnp.cumsum(counts)[:-1].astype(jnp.int32)])
+    r = jnp.arange(n, dtype=jnp.int32) - start[ch_s]  # rank within channel
+
+    # free queue slots, invalid-first
+    free_order = jnp.argsort(queue.valid, axis=1, stable=True)  # (C,Q)
+    n_free = Q - jnp.sum(queue.valid, axis=1)                   # (C,)
+    ch_c = jnp.minimum(ch_s, C - 1)
+    accepted = (ch_s < C) & (r < n_free[ch_c])
+    slot = jnp.where(accepted,
+                     free_order[ch_c, jnp.minimum(r, Q - 1)], Q)  # Q = drop
+
+    # request becomes visible at the MC after the cache+NOC path
+    arrival_cycle = (w * clock.window_cycles + flat.issue_cycle[order]
+                     + cfg.cache_path_cycles + cfg.noc_req_cycles)
+    arrival_tick = clock.cycle_to_tick(arrival_cycle)
+    issue_abs = (w * clock.window_cycles + flat.issue_cycle[order])
+
+    def put(qf, val):
+        return qf.at[ch_c, slot].set(
+            jnp.where(accepted, val, qf[ch_c, jnp.minimum(slot, Q - 1)]),
+            mode="drop")
+
+    queue = QueueState(
+        valid=put(queue.valid, jnp.ones_like(ch_c)),
+        is_write=put(queue.is_write, flat.is_write[order].astype(jnp.int32)),
+        arrival=put(queue.arrival, arrival_tick.astype(jnp.int32)),
+        issue_cycle=put(queue.issue_cycle, issue_abs.astype(jnp.int32)),
+        fbank=put(queue.fbank, dec.flat_bank[order]),
+        row=put(queue.row, dec.row[order]),
+        is_chase=put(queue.is_chase, flat.is_chase[order].astype(jnp.int32)),
+        core=put(queue.core, core_of[order]),
+    )
+
+    acc_demand = jnp.zeros(N_CORES, jnp.int32).at[core_of[order]].add(
+        (accepted & ~flat.is_pf[order]).astype(jnp.int32))
+    demanded = jnp.where(jnp.arange(N_CORES) < N_TRAFFIC, aux["want"], 0)
+    backlog = jnp.clip(demanded - jnp.minimum(acc_demand, demanded),
+                       0, BACKLOG_MAX)
+    seq = cores.seq + jnp.where(
+        jnp.arange(N_CORES) < N_TRAFFIC, aux["quota"],
+        aux["chase_iters"]).astype(jnp.int32)
+    cores = CoreState(seq=seq, backlog=backlog,
+                      chase_carry=aux["chase_carry"])
+    return queue, cores, jnp.sum(accepted.astype(jnp.int32))

@@ -1,0 +1,4 @@
+from repro.kernels.addr_decode.ops import decode_packed, decode_skylake, unpack
+from repro.kernels.addr_decode.ref import decode_reference
+
+__all__ = ["decode_packed", "decode_skylake", "unpack", "decode_reference"]

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the address-decode kernel.
+
+Delegates to `repro.core.addrmap.decode_skylake_xor` — the mapping the
+cycle-accurate simulator itself uses — so kernel == simulator by
+construction when the test passes.
+"""
+from __future__ import annotations
+
+from repro.core.addrmap import DecodedAddr, decode_skylake_xor
+
+
+def decode_reference(lines) -> DecodedAddr:
+    return decode_skylake_xor(lines)

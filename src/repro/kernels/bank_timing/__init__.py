@@ -1,0 +1,6 @@
+from repro.kernels.bank_timing.ops import (ChannelScalars, frfcfs_select,
+                                           pack_scalars, scalars_tuple)
+from repro.kernels.bank_timing.ref import select_reference
+
+__all__ = ["ChannelScalars", "frfcfs_select", "pack_scalars",
+           "scalars_tuple", "select_reference"]

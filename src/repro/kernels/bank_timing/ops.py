@@ -1,0 +1,27 @@
+"""Public wrapper for the FR-FCFS select kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.bank_timing.kernel import frfcfs_select
+from repro.kernels.bank_timing.ref import ChannelScalars
+
+
+def pack_scalars(t, bus_free, wtr_until, rtw_until, drain,
+                 hit_streak) -> jnp.ndarray:
+    """Pack per-channel scalars into the kernel's (C, 8) plane."""
+    C = bus_free.shape[0]
+    t = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (C,))
+    cols = [t, bus_free, wtr_until, rtw_until,
+            drain.astype(jnp.int32), hit_streak]
+    pad = [jnp.zeros((C,), jnp.int32)] * (8 - len(cols))
+    return jnp.stack([c.astype(jnp.int32) for c in cols] + pad, axis=1)
+
+
+def scalars_tuple(ch_plane: jnp.ndarray) -> ChannelScalars:
+    """Unpack the (C, 8) plane into the ref oracle's NamedTuple."""
+    return ChannelScalars(*(ch_plane[:, i] for i in range(6)))
+
+
+__all__ = ["frfcfs_select", "pack_scalars", "scalars_tuple",
+           "ChannelScalars"]

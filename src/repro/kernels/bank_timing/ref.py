@@ -1,0 +1,86 @@
+"""Pure-jnp oracle for the FR-FCFS eligibility + select kernel.
+
+This mirrors — input for input — the eligibility/priority block inside
+`repro.core.dram.tick` (the cycle-accurate simulator's hot loop).  The
+integration test in tests/test_kernels.py rebuilds these gathered
+fields from a live (QueueState, BankState) pair exactly the way
+`dram.tick` does and asserts the same command selection.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+_BIG = jnp.int32(1 << 28)
+
+# command codes (match repro.core.dram)
+NONE, RD, WR, ACT, PRE = 0, 1, 2, 3, 4
+
+
+class ChannelScalars(NamedTuple):
+    """Per-channel scalar state, all (C,) int32."""
+
+    t: jnp.ndarray            # current DRAM tick (broadcast)
+    bus_free: jnp.ndarray
+    wtr_until: jnp.ndarray
+    rtw_until: jnp.ndarray
+    drain: jnp.ndarray        # 0/1
+    hit_streak: jnp.ndarray
+
+
+def select_reference(arrived, is_write, row, open_e, nrd_e, nwr_e, nact_e,
+                     npre_e, faw_ok, hit_pend, arrival,
+                     ch: ChannelScalars, *, row_hit_cap: int = 0):
+    """FR-FCFS select over per-entry gathered fields.
+
+    All per-entry args are (C, Q) int32 (masks are 0/1).  Returns
+    (sel, cmd): per-channel selected queue index and command code.
+    """
+    t = ch.t[:, None]
+    row_hit = (open_e == row) & (arrived == 1)
+    closed = (open_e < 0) & (arrived == 1)
+    is_wr = is_write == 1
+    bus_ok = (ch.t >= ch.bus_free)[:, None]
+    drain_c = (ch.drain == 1)[:, None]
+
+    side_ok = jnp.where(is_wr, drain_c, ~drain_c)
+    elig_rd = (row_hit & ~is_wr & (t >= nrd_e) & bus_ok
+               & (ch.t >= ch.wtr_until)[:, None] & ~drain_c)
+    elig_wr = (row_hit & is_wr & (t >= nwr_e) & bus_ok
+               & (ch.t >= ch.rtw_until)[:, None] & drain_c)
+    elig_act = closed & (t >= nact_e) & (faw_ok == 1) & side_ok
+    elig_pre = ((arrived == 1) & (open_e >= 0) & (open_e != row)
+                & (t >= npre_e) & (hit_pend == 0) & side_ok)
+
+    age = _BIG - arrival
+    score = jnp.where(elig_rd | elig_wr, 3 * _BIG + age,
+             jnp.where(elig_act, 2 * _BIG + age,
+              jnp.where(elig_pre, 1 * _BIG + age, 0)))
+    if row_hit_cap > 0:
+        capped = (ch.hit_streak >= row_hit_cap)[:, None]
+        score = jnp.where(capped & (elig_rd | elig_wr), 1 * _BIG + age, score)
+        score = jnp.where(capped & elig_act, 3 * _BIG + age, score)
+
+    sel = jnp.argmax(score, axis=1)
+    pick = lambda f: jnp.take_along_axis(f, sel[:, None], 1)[:, 0]
+    any_cmd = pick(score) > 0
+    s_rd_ok = pick(elig_rd.astype(jnp.int32)) == 1
+    s_wr_ok = pick(elig_wr.astype(jnp.int32)) == 1
+    s_act_ok = pick(elig_act.astype(jnp.int32)) == 1
+    s_pre_ok = pick(elig_pre.astype(jnp.int32)) == 1
+    if row_hit_cap > 0:
+        capped1 = ch.hit_streak >= row_hit_cap
+        s_cas = any_cmd & (s_rd_ok | s_wr_ok) & ~(capped1 & s_act_ok)
+        s_act = any_cmd & s_act_ok & ~s_cas
+    else:
+        s_cas = any_cmd & (s_rd_ok | s_wr_ok)
+        s_act = any_cmd & s_act_ok & ~s_cas
+    s_pre = any_cmd & s_pre_ok & ~s_cas & ~s_act
+    s_iswr = pick(is_write) == 1
+
+    cmd = jnp.where(s_cas & ~s_iswr, RD,
+           jnp.where(s_cas & s_iswr, WR,
+            jnp.where(s_act, ACT,
+             jnp.where(s_pre, PRE, NONE))))
+    return sel.astype(jnp.int32), cmd.astype(jnp.int32)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mha_reference(q, k, v, *, causal: bool = False, scale: float | None = None):
+    """Multi-head attention, O(S^2) materialized — the correctness oracle.
+
+    q: (B, Hq, Sq, D);  k, v: (B, Hkv, Sk, D) with Hq % Hkv == 0 (GQA).
+    Returns (B, Hq, Sq, D) in q.dtype; softmax in float32.
+    """
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    assert hq % hkv == 0, (hq, hkv)
+    if hkv != hq:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        # decode convention: query i sits at absolute position
+        # (Sk - Sq + i), so the last query row attends to all keys.
+        qpos = jnp.arange(sq)[:, None] + (sk - sq)
+        kpos = jnp.arange(sk)[None, :]
+        s = jnp.where(kpos <= qpos, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

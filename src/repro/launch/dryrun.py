@@ -1,0 +1,267 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above run before ANY other import — jax locks the device
+count at first init, and the production meshes need 512 host devices.
+Nothing else in the repo sets this flag (smoke tests and benches see
+the real device count).
+
+Per cell this script:
+  1. builds the arch's ModelApi and the step for the shape's kind
+     (train_step / prefill forward / serve decode step),
+  2. lowers it under the production mesh with explicit in/out
+     shardings derived from each model's logical spec trees,
+  3. compiles, prints ``memory_analysis()`` (proves the per-chip
+     footprint) and ``cost_analysis()`` (FLOPs/bytes for §Roofline),
+  4. parses collective bytes out of the partitioned HLO and writes the
+     roofline record to ``reports/dryrun/<mesh>/<arch>__<shape>.json``.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry as cfgs
+from repro.configs.shapes import SHAPES
+from repro.launch.mesh import make_production_mesh, rules_for
+from repro.models.registry import get_model
+from repro.parallel.axes import (resolve, sharding_rules,
+                                 spec_tree_to_shardings)
+from repro.perfmodel import hlo_cost
+from repro.perfmodel import roofline as roof
+from repro.train import optimizer as opt
+from repro.train.step import batch_specs, build_train_step
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "reports", "dryrun")
+
+#: gradient-accumulation factor per arch for train_4k (bounds
+#: activation memory; microbatch = 256/accum global).
+TRAIN_ACCUM = {
+    "qwen2-72b": 16, "arctic-480b": 16, "grok-1-314b": 16,
+    "minitron-8b": 8, "llama-3.2-vision-11b": 8,
+}
+DEFAULT_ACCUM = 4
+
+#: bf16 Adam moments for archs whose fp32 m+v would not fit 16 GB/chip
+BF16_OPT_STATE = {"arctic-480b", "grok-1-314b"}
+
+
+def input_structs(api, shape, *, for_train: bool):
+    cfg = api.cfg
+    gb, seq = shape.global_batch, shape.seq_len
+    s = lambda sh, dt: jax.ShapeDtypeStruct(sh, dt)
+    batch = dict(tokens=s((gb, seq), jnp.int32))
+    if for_train:
+        batch["labels"] = s((gb, seq), jnp.int32)
+    if api.needs_ctx:
+        batch["ctx"] = s((gb, cfg.n_ctx_tokens, cfg.d_model), cfg.dtype)
+    return batch
+
+
+def _shardings_for_batch(api, batch_struct):
+    spec = dict(tokens=("batch", None))
+    if "labels" in batch_struct:
+        spec["labels"] = ("batch", None)
+    if "ctx" in batch_struct:
+        spec["ctx"] = ("batch", None, None)
+    return spec_tree_to_shardings(spec, batch_struct)
+
+
+def build_cell(api, shape, serving: bool = False):
+    """Returns (fn, arg_structs, in_shardings, out_shardings)."""
+    cfg = api.cfg
+    params_struct = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    if serving:
+        # §Perf iteration 2: serving stores parameters in bf16 —
+        # halves resident weight memory and any residual weight traffic
+        params_struct = jax.tree_util.tree_map(
+            lambda s: (jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+                       if s.dtype == jnp.float32 else s), params_struct)
+    p_shard = spec_tree_to_shardings(api.param_specs(), params_struct)
+
+    if shape.kind == "train":
+        accum = TRAIN_ACCUM.get(cfg.name, DEFAULT_ACCUM)
+        ocfg = opt.AdamWConfig(
+            state_dtype=(jnp.bfloat16 if cfg.name in BF16_OPT_STATE
+                         else jnp.float32))
+        ostate_struct = jax.eval_shape(
+            lambda p: opt.init_state(ocfg, p), params_struct)
+        o_shard = spec_tree_to_shardings(
+            opt.state_specs(api.param_specs()), ostate_struct)
+        batch_struct = input_structs(api, shape, for_train=True)
+        b_shard = _shardings_for_batch(api, batch_struct)
+        step = build_train_step(api, ocfg, accum=accum)
+        return (step, (params_struct, ostate_struct, batch_struct),
+                (p_shard, o_shard, b_shard), (p_shard, o_shard, None))
+
+    if shape.kind == "prefill":
+        batch_struct = input_structs(api, shape, for_train=False)
+        b_shard = _shardings_for_batch(api, batch_struct)
+        fwd = lambda p, b: api.forward(p, b)
+        return (fwd, (params_struct, batch_struct),
+                (p_shard, b_shard), None)
+
+    # decode
+    gb = shape.global_batch
+    cache_struct = jax.eval_shape(
+        lambda: api.init_cache(gb, shape.seq_len))
+    shard_seq = True
+    c_shard = spec_tree_to_shardings(
+        api.cache_specs(shard_seq=shard_seq), cache_struct)
+    tok_struct = jax.ShapeDtypeStruct((gb,), jnp.int32)
+    t_shard = spec_tree_to_shardings(("batch",), tok_struct)
+    step = lambda p, c, t: api.decode(p, c, t)
+    return (step, (params_struct, cache_struct, tok_struct),
+            (p_shard, c_shard, t_shard), (None, c_shard))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             report_dir: str = REPORT_DIR, force: bool = False,
+             verbose: bool = True, variant: str = "baseline") -> dict:
+    mesh_name = "multipod" if multi_pod else "pod"
+    outdir = os.path.join(
+        report_dir + ("_opt" if variant == "opt" else ""), mesh_name)
+    os.makedirs(outdir, exist_ok=True)
+    outfile = os.path.join(outdir, f"{arch}__{shape_name}.json")
+    if os.path.exists(outfile) and not force:
+        with open(outfile) as f:
+            return json.load(f)
+
+    shape = SHAPES[shape_name]
+    cfg = cfgs.get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+    # §Perf iteration 2: serving cells use the weight-stationary
+    # layout under the 'opt' variant (see parallel.axes.serve_rules)
+    serving = variant == "opt" and shape.kind == "decode"
+    with sharding_rules(mesh, rules_for(mesh, serving=serving)):
+        api = get_model(cfg)
+        fn, structs, in_sh, out_sh = build_cell(api, shape,
+                                                serving=serving)
+        with mesh:
+            # decode donates the cache (in-place update on device);
+            # train donates params+opt state — standard production
+            # aliasing, and it is what keeps the per-chip footprint
+            # at (args + working set) instead of 2x.
+            donate = {"decode": (1,), "train": (0, 1)}.get(
+                shape.kind, ())
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*structs)
+            compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost_raw = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    # cache the partitioned HLO (zstd) so cost-model improvements can
+    # re-analyze without recompiling (scripts/reanalyze.py)
+    try:
+        import zstandard
+        with open(outfile.replace(".json", ".hlo.zst"), "wb") as f:
+            f.write(zstandard.ZstdCompressor(level=9).compress(
+                text.encode()))
+    except Exception:
+        pass
+    # trip-count-aware HLO cost model (cost_analysis counts while
+    # bodies once; a scan-over-layers step is undercounted ~L x)
+    parsed = hlo_cost.analyze(text)
+    cost = {"flops": parsed["flops"], "bytes accessed": parsed["bytes"]}
+    coll = parsed
+
+    params_struct = structs[0]
+    n_active = roof.count_active_params(
+        params_struct, cfg.top_k, cfg.n_experts)
+    tokens = (shape.global_batch * shape.seq_len
+              if shape.kind in ("train", "prefill")
+              else shape.global_batch)
+    mflops = roof.model_flops(shape.kind, n_active, tokens)
+
+    bytes_per_dev = float(getattr(mem, "temp_size_in_bytes", 0)
+                          + getattr(mem, "argument_size_in_bytes", 0))
+    r = roof.make(arch, shape_name, mesh_name, chips, cost=cost,
+                  collectives=coll, model_flops=mflops,
+                  bytes_per_device=bytes_per_dev)
+    record = dict(r.as_dict(), compile_s=t_compile,
+                  collectives=dict(bytes_by_op=coll["bytes_by_op"],
+                                   counts=coll["counts"],
+                                   total_bytes=coll["total_bytes"]),
+                  cost_analysis_raw={k: float(v)
+                                     for k, v in cost_raw.items()
+                                     if isinstance(v, (int, float))},
+                  n_params=roof.count_params_struct(params_struct),
+                  n_active_params=n_active,
+                  memory_analysis=dict(
+                      temp=float(getattr(mem, "temp_size_in_bytes", 0)),
+                      args=float(getattr(mem, "argument_size_in_bytes", 0)),
+                      output=float(getattr(mem, "output_size_in_bytes", 0)),
+                  ))
+    with open(outfile, "w") as f:
+        json.dump(record, f, indent=1)
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: "
+              f"compile {t_compile:.0f}s  "
+              f"mem/dev {bytes_per_dev / 2**30:.2f} GiB  "
+              f"compute {r.compute_s * 1e3:.2f} ms  "
+              f"memory {r.memory_s * 1e3:.2f} ms  "
+              f"collective {r.collective_s * 1e3:.2f} ms  "
+              f"-> {r.bottleneck}", flush=True)
+        print(f"  memory_analysis: {mem}", flush=True)
+        ck = {k: v for k, v in cost.items()
+              if k in ("flops", "bytes accessed")}
+        print(f"  cost_analysis: {ck}", flush=True)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--report-dir", default=REPORT_DIR)
+    ap.add_argument("--variant", choices=("baseline", "opt"),
+                    default="baseline")
+    args = ap.parse_args()
+
+    if args.all:
+        cells = cfgs.cells()
+        if args.arch:
+            cells = [c for c in cells if c[0] == args.arch]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = {"single": (False,), "multi": (True,),
+              "both": (False, True)}[args.mesh]
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                run_cell(arch, shape, mp, report_dir=args.report_dir,
+                         force=args.force, variant=args.variant)
+            except Exception as e:       # noqa: BLE001
+                failures.append((arch, shape, mp, repr(e)))
+                print(f"[dryrun] FAIL {arch} x {shape} "
+                      f"(multi_pod={mp}): {e}", flush=True)
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run cells failed")
+    print("[dryrun] all requested cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any
+jax import; everything else sees the real device count).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.parallel.axes import (multi_pod_rules, serve_rules,
+                                 single_pod_rules)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def rules_for(mesh, *, serving: bool = False) -> dict:
+    multi = "pod" in mesh.axis_names
+    if serving:
+        return serve_rules(multi_pod=multi)
+    return multi_pod_rules() if multi else single_pod_rules()
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh over the real local device (smoke tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         devices=jax.devices()[:1])

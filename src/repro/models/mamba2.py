@@ -1,0 +1,337 @@
+"""Mamba2 (SSD) blocks and the Zamba2 hybrid (zamba2-2.7b)
+[arXiv:2405.21060, arXiv:2411.15242].
+
+Mamba2 head-structured state space:
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t      (A scalar per head)
+    y_t = C_t . h_t + D x_t
+Training uses the SSD *chunked* algorithm: within-chunk quadratic
+(decay-masked) term + across-chunk recurrence carried by `lax.scan`,
+so peak memory is (B, H, Q, Q) per chunk instead of (B, H, S, S).
+Decode is the O(1) recurrent update (state (H, P, N) per layer) — the
+property that makes the 500k-token decode cell run.
+
+Zamba2 layout: ``n_layers`` Mamba2 blocks with ONE shared
+attention+MLP transformer block applied every ``attn_every`` layers.
+Following Zamba, the shared block reads concat(hidden, embedding) and
+is projected back to d_model; each *application* keeps its own KV
+cache (params shared, activations not).  We document (DESIGN.md) the
+width simplification: the concat is linearly folded to d_model before
+the shared block rather than running the block at 2x width.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.common import ModelConfig
+from repro.parallel.axes import shard
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+
+
+def init_mamba(cfg: ModelConfig, rng, scale: float):
+    d = cfg.d_model
+    d_in = cfg.d_inner
+    n, h = cfg.ssm_state, cfg.ssm_heads
+    conv_dim = d_in + 2 * n          # x, B, C share the conv
+    ks = jax.random.split(rng, 5)
+    return dict(
+        norm=jnp.ones((d,), jnp.float32),
+        w_in=jax.random.normal(
+            ks[0], (d, 2 * d_in + 2 * n + h), jnp.float32) * scale,
+        conv_w=jax.random.normal(
+            ks[1], (cfg.conv_kernel, conv_dim), jnp.float32) * 0.1,
+        conv_b=jnp.zeros((conv_dim,), jnp.float32),
+        a_log=jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        dt_bias=jnp.zeros((h,), jnp.float32),
+        d_skip=jnp.ones((h,), jnp.float32),
+        norm_y=jnp.ones((d_in,), jnp.float32),
+        w_out=jax.random.normal(ks[2], (d_in, d), jnp.float32) * scale,
+    )
+
+
+def mamba_specs(cfg: ModelConfig):
+    return dict(norm=(None,), w_in=("fsdp", "state"),
+                conv_w=(None, "state"), conv_b=("state",),
+                a_log=(None,), dt_bias=(None,), d_skip=(None,),
+                norm_y=("state",), w_out=("state", "fsdp"))
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    d_in, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z, xs, bc, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + 2 * n], axis=-1)
+    return z, xs, bc, dt
+
+
+def _ssd_scan(cfg: ModelConfig, xh, dt, a, bmat, cmat):
+    """SSD chunked scan.
+
+    xh   (B,S,H,P)  inputs per head
+    dt   (B,S,H)    positive step sizes
+    a    (H,)       negative decay rates
+    bmat (B,S,N), cmat (B,S,N)  shared across heads (n_groups=1)
+    Returns y (B,S,H,P) fp32.
+    """
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    q = min(cfg.ssm_chunk, s)
+    s_pad = -(-s // q) * q
+    if s_pad != s:
+        # dt=0 padding is inert: decay exp(0)=1, zero input contribution
+        pad = lambda t: jnp.pad(t, ((0, 0), (0, s_pad - s))
+                                + ((0, 0),) * (t.ndim - 2))
+        xh, dt, bmat, cmat = pad(xh), pad(dt), pad(bmat), pad(cmat)
+    s_orig, s = s, s_pad
+    nc = s // q
+    da = dt * a[None, None, :]                        # (B,S,H), negative
+    xb = (xh * dt[..., None]).astype(jnp.float32)     # dt-weighted input
+
+    resh = lambda t: t.reshape(b, nc, q, *t.shape[2:])
+    da_c, xb_c = resh(da), resh(xb)
+    b_c, c_c = resh(bmat.astype(jnp.float32)), resh(cmat.astype(jnp.float32))
+    cum = jnp.cumsum(da_c, axis=2)                    # (B,nc,q,H)
+
+    # within-chunk (diagonal) term: decay-masked quadratic
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,q,q,H)
+    iq = jnp.arange(q)
+    mask = iq[:, None] >= iq[None, :]
+    l_mat = jnp.where(mask[None, None, :, :, None], jnp.exp(rel), 0.0)
+    cb = jnp.einsum("bkin,bkjn->bkij", c_c, b_c)          # (B,nc,q,q)
+    y_diag = jnp.einsum("bkij,bkijh,bkjhp->bkihp",
+                        cb, l_mat, xb_c)
+
+    # chunk boundary states + across-chunk recurrence
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)       # (B,nc,q,H)
+    states = jnp.einsum("bkjn,bkjh,bkjhp->bkhnp",
+                        b_c, decay_to_end, xb_c)          # (B,nc,H,N,P)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])               # (B,nc,H)
+
+    def scanb(h_prev, args):
+        st, dec = args                                    # (B,H,N,P),(B,H)
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev
+
+    _, h_prevs = jax.lax.scan(
+        scanb, jnp.zeros((b, h, n, p), jnp.float32),
+        (states.transpose(1, 0, 2, 3, 4),
+         chunk_decay.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)            # (B,nc,H,N,P)
+
+    # off-chunk term: contribution of the carried state
+    decay_from_start = jnp.exp(cum)                       # (B,nc,q,H)
+    y_off = jnp.einsum("bkin,bkih,bkhnp->bkihp",
+                       c_c, decay_from_start, h_prevs)
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y[:, :s_orig]
+
+
+def mamba_fwd(cfg: ModelConfig, p, x):
+    dt_ = cfg.dtype
+    d_in, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = cm.rmsnorm(x, p["norm"], cfg.norm_eps)
+    zxbcdt = z @ p["w_in"].astype(dt_)
+    zg, xs, bc, dtp = _split_proj(cfg, zxbcdt)
+
+    # causal conv over (x, B, C)
+    xbc = jnp.concatenate([xs, bc], axis=-1)
+    k = cfg.conv_kernel
+    xbc_pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    conv = sum(xbc_pad[:, i:i + xbc.shape[1]] * p["conv_w"][i].astype(dt_)
+               for i in range(k)) + p["conv_b"].astype(dt_)
+    conv = jax.nn.silu(conv)
+    xs, bmat, cmat = jnp.split(conv, [d_in, d_in + n], axis=-1)
+
+    dt = jax.nn.softplus(dtp.astype(jnp.float32)
+                         + p["dt_bias"])                  # (B,S,H)
+    a = -jnp.exp(p["a_log"])                              # (H,)
+    xh = xs.reshape(*xs.shape[:2], h, cfg.ssm_head_dim)
+    xh = shard(xh, "batch", None, "state", None)
+    y = _ssd_scan(cfg, xh, dt, a, bmat, cmat)
+    y = y + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(*y.shape[:2], d_in).astype(dt_)
+    y = cm.rmsnorm(y * jax.nn.silu(zg), p["norm_y"], cfg.norm_eps)
+    return x + y @ p["w_out"].astype(dt_)
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int):
+    return dict(
+        h=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state,
+                     cfg.ssm_head_dim), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_kernel - 1,
+                        cfg.d_inner + 2 * cfg.ssm_state), jnp.float32),
+    )
+
+
+def mamba_step(cfg: ModelConfig, p, state, x):
+    """One-token recurrent update.  x (B, d)."""
+    dt_ = cfg.dtype
+    d_in, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = cm.rmsnorm(x, p["norm"], cfg.norm_eps)
+    zxbcdt = z @ p["w_in"].astype(dt_)
+    zg, xs, bc, dtp = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([xs, bc], axis=-1)              # (B, conv_dim)
+    hist = jnp.concatenate(
+        [state["conv"], xbc[:, None, :].astype(jnp.float32)], axis=1)
+    conv = (jnp.einsum("bkc,kc->bc", hist, p["conv_w"])
+            + p["conv_b"])
+    conv = jax.nn.silu(conv)
+    xs, bmat, cmat = jnp.split(conv, [d_in, d_in + n], axis=-1)
+    dt = jax.nn.softplus(dtp.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"])
+    xh = xs.reshape(-1, h, cfg.ssm_head_dim)
+    dec = jnp.exp(dt * a[None, :])                        # (B,H)
+    hs = (state["h"] * dec[..., None, None]
+          + jnp.einsum("bn,bhp->bhnp", bmat, xh * dt[..., None]))
+    y = jnp.einsum("bn,bhnp->bhp", cmat, hs)
+    y = y + p["d_skip"][None, :, None] * xh
+    y = y.reshape(-1, d_in).astype(dt_)
+    y = cm.rmsnorm(y * jax.nn.silu(zg), p["norm_y"], cfg.norm_eps)
+    new_state = dict(h=hs, conv=hist[:, 1:])
+    return new_state, x + y @ p["w_out"].astype(dt_)
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid: mamba backbone + shared attention block
+
+
+def _n_shared(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.attn_every
+
+
+def init_shared_block(cfg: ModelConfig, rng, scale: float):
+    k0, k1 = jax.random.split(rng)
+    from repro.models.transformer import init_block
+    return dict(
+        w_cat=jax.random.normal(
+            k0, (2 * cfg.d_model, cfg.d_model), jnp.float32) * scale,
+        block=init_block(cfg, k1),
+    )
+
+
+def shared_block_specs(cfg: ModelConfig):
+    from repro.models.transformer import block_specs
+    return dict(w_cat=("fsdp", None), block=block_specs(cfg))
+
+
+def init_params(cfg: ModelConfig, rng):
+    from repro.models.transformer import stack_layers
+    k_emb, k_m, k_s = jax.random.split(rng, 3)
+    scale = 0.02 / (2 * cfg.n_layers) ** 0.5
+    p = dict(
+        embed=cm.init_embedding(cfg, k_emb),
+        mamba=stack_layers(lambda r: init_mamba(cfg, r, scale), k_m,
+                           cfg.n_layers),
+    )
+    if cfg.family == "hybrid":
+        p["shared"] = init_shared_block(cfg, k_s, scale)
+    return p
+
+
+def param_specs(cfg: ModelConfig):
+    from repro.models.transformer import stacked_specs
+    p = dict(embed=cm.embedding_specs(cfg),
+             mamba=stacked_specs(mamba_specs(cfg)))
+    if cfg.family == "hybrid":
+        p["shared"] = shared_block_specs(cfg)
+    return p
+
+
+def _shared_apply(cfg: ModelConfig, p, x, x0, positions):
+    from repro.models.transformer import block_fwd
+    u = jnp.concatenate([x, x0], axis=-1) @ p["w_cat"].astype(cfg.dtype)
+    return x + block_fwd(cfg, p["block"], u, positions) - u  # residual on x
+
+
+def forward(cfg: ModelConfig, params, tokens):
+    x = cm.embed(cfg, params["embed"], tokens)
+    x0 = x
+    positions = jnp.arange(tokens.shape[1])[None, :]
+    per = cfg.attn_every if cfg.family == "hybrid" else cfg.n_layers
+    n_seg = cfg.n_layers // per
+    mp = jax.tree_util.tree_map(
+        lambda a: a.reshape(n_seg, per, *a.shape[1:]),
+        cm.cast_params(cfg, params["mamba"]))
+
+    @jax.checkpoint
+    def mbody(x, lp):
+        return mamba_fwd(cfg, lp, x), None
+
+    for seg in range(n_seg):
+        x, _ = jax.lax.scan(
+            mbody, x, jax.tree_util.tree_map(lambda a: a[seg], mp))
+        if cfg.family == "hybrid":
+            x = _shared_apply(cfg, params["shared"], x, x0, positions)
+    return cm.logits(cfg, params["embed"], x)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    rep = lambda st, nl: jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (nl,) + a.shape), st)
+    cache = dict(mamba=rep(init_mamba_state(cfg, batch), cfg.n_layers),
+                 length=jnp.zeros((batch,), jnp.int32))
+    if cfg.family == "hybrid":
+        n_sh = _n_shared(cfg)
+        shape = (n_sh, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+        cache["shared_kv"] = dict(k=jnp.zeros(shape, cfg.dtype),
+                                  v=jnp.zeros(shape, cfg.dtype))
+    return cache
+
+
+def cache_specs(cfg: ModelConfig, *, shard_seq: bool = True):
+    spec = dict(
+        mamba=dict(h=(None, "batch", "state", None, None),
+                   conv=(None, "batch", None, "state")),
+        length=(None,))
+    if cfg.family == "hybrid":
+        kv = (None, "batch", "kv_seq" if shard_seq else None,
+              "kv_heads", None)
+        spec["shared_kv"] = dict(k=kv, v=kv)
+    return spec
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    from repro.models.transformer import decode_block
+    x = cm.embed(cfg, params["embed"], tokens[:, None])[:, 0]
+    x0 = x
+    lengths = cache["length"]
+    per = cfg.attn_every if cfg.family == "hybrid" else cfg.n_layers
+    n_seg = cfg.n_layers // per
+    mp = jax.tree_util.tree_map(
+        lambda a: a.reshape(n_seg, per, *a.shape[1:]), params["mamba"])
+    ms = jax.tree_util.tree_map(
+        lambda a: a.reshape(n_seg, per, *a.shape[1:]), cache["mamba"])
+
+    def mbody(x, scan_in):
+        lp, st = scan_in
+        st, x = mamba_step(cfg, lp, st, x)
+        return x, st
+
+    new_m, new_kv = [], []
+    for seg in range(n_seg):
+        x, st_out = jax.lax.scan(
+            mbody, x, (jax.tree_util.tree_map(lambda a: a[seg], mp),
+                       jax.tree_util.tree_map(lambda a: a[seg], ms)))
+        new_m.append(st_out)
+        if cfg.family == "hybrid":
+            p_sh = params["shared"]
+            u = (jnp.concatenate([x, x0], axis=-1)
+                 @ p_sh["w_cat"].astype(cfg.dtype))[:, None, :]
+            kv = jax.tree_util.tree_map(
+                lambda a: a[seg], cache["shared_kv"])
+            kv, u_out = decode_block(cfg, p_sh["block"], kv, u, lengths)
+            new_kv.append(kv)
+            x = x + u_out[:, 0] - u[:, 0]
+    out = cm.logits(cfg, params["embed"], x[:, None])[:, 0]
+    stackf = lambda lst: jax.tree_util.tree_map(lambda *a: jnp.stack(a), *lst)
+    new_cache = dict(
+        mamba=jax.tree_util.tree_map(
+            lambda a: a.reshape(cfg.n_layers, *a.shape[2:]),
+            stackf(new_m)),
+        length=lengths + 1)
+    if cfg.family == "hybrid":
+        new_cache["shared_kv"] = stackf(new_kv)
+    return out, new_cache

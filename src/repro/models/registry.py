@@ -1,0 +1,117 @@
+"""Family dispatch: one uniform model API over all six families.
+
+    api = get_model(cfg)
+    params = api.init(rng)
+    logits = api.forward(params, batch)          # batch dict, see below
+    cache  = api.init_cache(batch_size, max_seq)
+    logits, cache = api.decode(params, cache, tokens)
+
+Batch dict keys: ``tokens`` always; ``ctx`` for vlm (patch embeddings)
+and audio (frame embeddings).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    forward: Callable[..., Any]            # (params, batch) -> logits
+    param_specs: Callable[[], Any]
+    init_cache: Callable[..., Any]         # (batch, max_seq) -> cache
+    cache_specs: Callable[..., Any]        # (shard_seq=...) -> spec tree
+    decode: Callable[..., Any]             # (params, cache, tokens)
+    fill_ctx: Callable[..., Any] | None = None   # (params, cache, ctx)
+    needs_ctx: bool = False
+
+
+def get_model(cfg: ModelConfig) -> ModelApi:
+    fam = cfg.family
+    if fam == "dense":
+        from repro.models import transformer as m
+        return ModelApi(
+            cfg=cfg,
+            init=lambda rng: m.init_params(cfg, rng),
+            forward=lambda p, b: m.forward(cfg, p, b["tokens"]),
+            param_specs=lambda: m.param_specs(cfg),
+            init_cache=lambda bs, ms: m.init_cache(cfg, bs, ms),
+            cache_specs=lambda **kw: m.cache_specs(cfg, **kw),
+            decode=lambda p, c, t: m.decode_step(cfg, p, c, t))
+    if fam == "moe":
+        from repro.models import transformer as m
+        from repro.models import moe
+        import functools
+        mlp_init = functools.partial(
+            moe.init_moe, cfg,
+            scale=0.02 / (2 * cfg.n_layers) ** 0.5)
+        mlp_fn = functools.partial(moe.moe_mlp_y, cfg)
+        return ModelApi(
+            cfg=cfg,
+            init=lambda rng: m.init_params(
+                cfg, rng, mlp_init=lambda r: mlp_init(r)),
+            forward=lambda p, b: m.forward(cfg, p, b["tokens"],
+                                           mlp_fn=mlp_fn),
+            param_specs=lambda: m.param_specs(cfg, moe.moe_specs(cfg)),
+            init_cache=lambda bs, ms: m.init_cache(cfg, bs, ms),
+            cache_specs=lambda **kw: m.cache_specs(cfg, **kw),
+            decode=lambda p, c, t: m.decode_step(cfg, p, c, t,
+                                                 mlp_fn=mlp_fn))
+    if fam == "ssm":
+        if cfg.d_ff == 0 and cfg.slstm_every:     # xlstm
+            from repro.models import xlstm as m
+        else:
+            from repro.models import mamba2 as m
+        return ModelApi(
+            cfg=cfg,
+            init=lambda rng: m.init_params(cfg, rng),
+            forward=lambda p, b: m.forward(cfg, p, b["tokens"]),
+            param_specs=lambda: m.param_specs(cfg),
+            init_cache=lambda bs, ms: m.init_cache(cfg, bs, ms),
+            cache_specs=lambda **kw: m.cache_specs(cfg, **kw),
+            decode=lambda p, c, t: m.decode_step(cfg, p, c, t))
+    if fam == "hybrid":
+        from repro.models import mamba2 as m
+        return ModelApi(
+            cfg=cfg,
+            init=lambda rng: m.init_params(cfg, rng),
+            forward=lambda p, b: m.forward(cfg, p, b["tokens"]),
+            param_specs=lambda: m.param_specs(cfg),
+            init_cache=lambda bs, ms: m.init_cache(cfg, bs, ms),
+            cache_specs=lambda **kw: m.cache_specs(cfg, **kw),
+            decode=lambda p, c, t: m.decode_step(cfg, p, c, t))
+    if fam == "vlm":
+        from repro.models import vlm as m
+        return ModelApi(
+            cfg=cfg,
+            init=lambda rng: m.init_params(cfg, rng),
+            forward=lambda p, b: m.forward(cfg, p, b["tokens"], b["ctx"]),
+            param_specs=lambda: m.param_specs(cfg),
+            init_cache=lambda bs, ms: m.init_cache(cfg, bs, ms),
+            cache_specs=lambda **kw: m.cache_specs(cfg, **kw),
+            decode=lambda p, c, t: m.decode_step(cfg, p, c, t),
+            fill_ctx=lambda p, c, ctx: m.fill_cross_cache(cfg, p, c, ctx),
+            needs_ctx=True)
+    if fam == "audio":
+        from repro.models import whisper as m
+        return ModelApi(
+            cfg=cfg,
+            init=lambda rng: m.init_params(cfg, rng),
+            forward=lambda p, b: m.forward(cfg, p, b["tokens"], b["ctx"]),
+            param_specs=lambda: m.param_specs(cfg),
+            init_cache=lambda bs, ms: m.init_cache(cfg, bs, ms),
+            cache_specs=lambda **kw: m.cache_specs(cfg, **kw),
+            decode=lambda p, c, t: m.decode_step(cfg, p, c, t),
+            fill_ctx=lambda p, c, ctx: m.fill_cross_cache(cfg, p, c, ctx),
+            needs_ctx=True)
+    raise ValueError(f"unknown family {fam!r}")
+
+
+def count_params(params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))

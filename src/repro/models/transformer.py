@@ -1,0 +1,231 @@
+"""Decoder-only GQA transformer (tinyllama / minitron / qwen2 / deepseek
+families) and the shared block machinery reused by the MoE / VLM /
+audio variants.
+
+Layers are stacked along a leading L axis and consumed by `lax.scan`
+with `jax.checkpoint` around the block — one compact While loop in HLO
+regardless of depth, with one saved residual per layer (the remat
+policy the §Perf log iterates on).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.common import ModelConfig
+from repro.parallel.axes import shard
+
+
+# ---------------------------------------------------------------------------
+# params
+
+
+def init_block(cfg: ModelConfig, rng, mlp_init=None):
+    """One decoder block; callers vmap this over layer seeds to stack."""
+    k1, k2 = jax.random.split(rng)
+    scale = 0.02 / (2 * cfg.n_layers) ** 0.5
+    mlp_init = mlp_init or (lambda r: cm.init_mlp(cfg, r, scale))
+    return dict(
+        norm1=jnp.ones((cfg.d_model,), jnp.float32),
+        attn=cm.init_attn(cfg, k1, scale),
+        norm2=jnp.ones((cfg.d_model,), jnp.float32),
+        mlp=mlp_init(k2),
+    )
+
+
+def block_specs(cfg: ModelConfig, mlp_spec=None):
+    """Spec tree for one block; leading 'layers' dim added by stack()."""
+    return dict(norm1=(None,), attn=cm.attn_specs(cfg), norm2=(None,),
+                mlp=mlp_spec or cm.mlp_specs())
+
+
+def stack_layers(init_one, rng, n_layers: int):
+    """vmap a per-layer init over seeds -> stacked (L, ...) params."""
+    return jax.vmap(init_one)(jax.random.split(rng, n_layers))
+
+
+def stacked_specs(spec_tree):
+    """Prepend the (unsharded) layer axis to every leaf of a spec tree."""
+    return jax.tree_util.tree_map(
+        lambda t: (None,) + t, spec_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(n, (str, type(None))) for n in x))
+
+
+def init_params(cfg: ModelConfig, rng, mlp_init=None):
+    k_emb, k_layers = jax.random.split(rng)
+    return dict(
+        embed=cm.init_embedding(cfg, k_emb),
+        layers=stack_layers(
+            lambda r: init_block(cfg, r, mlp_init), k_layers, cfg.n_layers),
+    )
+
+
+def param_specs(cfg: ModelConfig, mlp_spec=None):
+    return dict(embed=cm.embedding_specs(cfg),
+                layers=stacked_specs(block_specs(cfg, mlp_spec)))
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+
+
+def _residual_spec():
+    """Residual-stream sharding (REPRO_SP_RESIDUAL=1: Megatron-style
+    sequence parallelism — norms/residual ops run on seq shards over
+    the 'model' axis; §Perf A/B knob)."""
+    import os
+    if os.environ.get("REPRO_SP_RESIDUAL"):
+        return ("batch", "seq", None)
+    return ("batch", None, None)
+
+
+def block_fwd(cfg: ModelConfig, p, x, positions, mlp_fn=None):
+    h = cm.rmsnorm(x, p["norm1"], cfg.norm_eps)
+    x = x + cm.self_attention(cfg, p["attn"], h, positions)
+    h = cm.rmsnorm(x, p["norm2"], cfg.norm_eps)
+    x = x + (mlp_fn or functools.partial(cm.mlp, cfg))(p["mlp"], h)
+    return shard(x, *_residual_spec())
+
+
+def _remat():
+    """Per-layer remat policy (REPRO_REMAT_POLICY: full|dots — §Perf
+    A/B knob).  'full' saves one residual per layer and recomputes the
+    block in bwd; 'dots' additionally saves matmul outputs (no
+    attention recompute, more saved activations)."""
+    import functools
+    import os
+    if os.environ.get("REPRO_REMAT_POLICY") == "dots":
+        return functools.partial(
+            jax.checkpoint,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint
+
+
+def forward(cfg: ModelConfig, params, tokens, mlp_fn=None):
+    """tokens (B, S) -> logits (B, S, V)."""
+    x = cm.embed(cfg, params["embed"], tokens)
+    positions = jnp.arange(tokens.shape[1])[None, :]
+
+    @_remat()
+    def body(x, layer_p):
+        return block_fwd(cfg, layer_p, x, positions, mlp_fn), None
+
+    x, _ = jax.lax.scan(body, x, cm.cast_params(cfg, params["layers"]))
+    return cm.logits(cfg, params["embed"], x)
+
+
+# ---------------------------------------------------------------------------
+# KV cache serving
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    dt = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return dict(k=jnp.zeros(shape, dt), v=jnp.zeros(shape, dt),
+                length=jnp.zeros((batch,), jnp.int32))
+
+
+def cache_specs(cfg: ModelConfig, *, shard_seq: bool = True):
+    """KV sharded (batch, seq, kv-heads) by the dedup rules: the seq
+    dim takes whatever mesh axes the batch dim leaves free —
+    flash-decoding split-KV over 'model' for batched decode, full
+    ('data','model') seq sharding for the batch=1 long-context cell.
+    The partial-softmax combine lowers to small all-reduces, see
+    `attention_over_cache`."""
+    kv = (None, "batch", "kv_seq" if shard_seq else None, "kv_heads", None)
+    return dict(k=kv, v=kv, length=(None,))
+
+
+def attention_over_cache(cfg: ModelConfig, q, ck, cv, lengths):
+    """Decode attention: q (B,Sq,Hq,D) over cache (B,T,Hkv,D).
+
+    Grouped GQA (no repeated-KV materialization) and written
+    max/sum-explicitly so that when the cache is sequence-sharded,
+    SPMD turns the reductions into the flash-decoding combine
+    (all-reduce of per-shard partial max/denominator/output) instead
+    of an all-gather of the KV cache.
+    """
+    b, sq, hq, d = q.shape
+    t, hkv = ck.shape[1], ck.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    scale = 1.0 / (d ** 0.5)
+    s = jnp.einsum("bqhgd,bthd->bqhgt", qg.astype(jnp.float32),
+                   ck.astype(jnp.float32)) * scale
+    if cfg.attn_logit_softcap > 0.0:
+        s = cfg.attn_logit_softcap * jnp.tanh(s / cfg.attn_logit_softcap)
+    valid = (jnp.arange(t)[None, :]
+             < lengths[:, None])[:, None, None, None, :]
+    s = jnp.where(valid, s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    o = jnp.einsum("bqhgt,bthd->bqhgd", p, cv.astype(jnp.float32))
+    o = o / jnp.sum(p, axis=-1)[..., None]
+    return o.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def decode_block(cfg: ModelConfig, p, kv, x, lengths, mlp_fn=None):
+    """One block, one new token.  x (B,1,d); kv dict of (B,T,Hkv,D)."""
+    h = cm.rmsnorm(x, p["norm1"], cfg.norm_eps)
+    q, k_new, v_new = cm.attn_qkv(cfg, p["attn"], h, lengths[:, None])
+    # write the new KV at each sequence's current length
+    upd = lambda c, n: jax.vmap(
+        lambda cb, nb, lb: jax.lax.dynamic_update_slice_in_dim(
+            cb, nb.astype(cb.dtype), lb, axis=0))(c, n, lengths)
+    # Pin the cache layout: without this, SPMD back-propagates the
+    # head-sharded attention-output layout into the cache and moves
+    # the WHOLE cache across the mesh every layer (measured 11.8 GB
+    # of collective-permute per decode step on tinyllama/decode_32k).
+    pin = lambda c: shard(c, "batch", "kv_seq", "kv_heads", None)
+    kv = dict(k=pin(upd(kv["k"], k_new)), v=pin(upd(kv["v"], v_new)))
+    o = attention_over_cache(cfg, q, kv["k"], kv["v"], lengths + 1)
+    x = x + cm.attn_out(cfg, p["attn"], o)
+    h = cm.rmsnorm(x, p["norm2"], cfg.norm_eps)
+    x = x + (mlp_fn or functools.partial(cm.mlp, cfg))(p["mlp"], h)
+    return kv, x
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, mlp_fn=None):
+    """One decode step.  tokens (B,) -> (logits (B,V), cache')."""
+    x = cm.embed(cfg, params["embed"], tokens[:, None])
+    lengths = cache["length"]
+
+    def body(x, scan_in):
+        layer_p, kv = scan_in
+        kv, x = decode_block(cfg, layer_p, kv, x, lengths, mlp_fn)
+        return x, kv
+
+    x, kv = jax.lax.scan(
+        body, x, (params["layers"], dict(k=cache["k"], v=cache["v"])))
+    out = cm.logits(cfg, params["embed"], x)[:, 0]
+    return out, dict(k=kv["k"], v=kv["v"], length=lengths + 1)
+
+
+def prefill(cfg: ModelConfig, params, tokens, max_seq: int | None = None,
+            mlp_fn=None):
+    """Prefill: forward + populate a KV cache.  tokens (B, S)."""
+    b, s = tokens.shape
+    t = max_seq or s
+    x = cm.embed(cfg, params["embed"], tokens)
+    positions = jnp.arange(s)[None, :]
+
+    def body(x, layer_p):
+        h = cm.rmsnorm(x, layer_p["norm1"], cfg.norm_eps)
+        q, k, v = cm.attn_qkv(cfg, layer_p["attn"], h, positions)
+        o = cm.attention(cfg, q, k, v, causal=True)
+        x = x + cm.attn_out(cfg, layer_p["attn"], o)
+        h = cm.rmsnorm(x, layer_p["norm2"], cfg.norm_eps)
+        x = x + (mlp_fn or functools.partial(cm.mlp, cfg))(layer_p["mlp"], h)
+        pad = ((0, 0), (0, t - s), (0, 0), (0, 0))
+        return shard(x, "batch", None, None), dict(
+            k=jnp.pad(k, pad), v=jnp.pad(v, pad))
+
+    x, kv = jax.lax.scan(body, x, params["layers"])
+    logit = cm.logits(cfg, params["embed"], x)
+    cache = dict(k=kv["k"], v=kv["v"],
+                 length=jnp.full((b,), s, jnp.int32))
+    return logit, cache

@@ -1,0 +1,164 @@
+"""Llama-3.2-Vision-style VLM backbone (llama-3.2-vision-11b).
+
+40 decoder layers of which every ``cross_attn_every``-th is a *gated
+cross-attention* layer over precomputed image patch embeddings (the
+modality frontend is a stub per the assignment: ``input_specs()``
+provides the patch embeddings).  Structure per segment:
+(cross_attn_every - 1) self-attention blocks scanned, then one gated
+cross block (Flamingo-style tanh gates, init 0 -> identity at init).
+
+Serving: self layers keep a KV cache; cross layers precompute the
+image K/V once at prefill and reuse them every decode step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.common import ModelConfig
+from repro.models import transformer as tf
+from repro.parallel.axes import shard
+
+
+def _segments(cfg: ModelConfig):
+    per = cfg.cross_attn_every
+    assert per > 1 and cfg.n_layers % per == 0, (cfg.n_layers, per)
+    return cfg.n_layers // per, per - 1
+
+
+def init_cross_block(cfg: ModelConfig, rng, scale: float):
+    k1, k2 = jax.random.split(rng)
+    return dict(
+        norm1=jnp.ones((cfg.d_model,), jnp.float32),
+        attn=cm.init_attn(cfg, k1, scale),
+        gate_attn=jnp.zeros((), jnp.float32),
+        norm2=jnp.ones((cfg.d_model,), jnp.float32),
+        mlp=cm.init_mlp(cfg, k2, scale),
+        gate_mlp=jnp.zeros((), jnp.float32),
+    )
+
+
+def cross_block_specs(cfg: ModelConfig):
+    return dict(norm1=(None,), attn=cm.attn_specs(cfg), gate_attn=(),
+                norm2=(None,), mlp=cm.mlp_specs(), gate_mlp=())
+
+
+def init_params(cfg: ModelConfig, rng):
+    n_seg, n_self = _segments(cfg)
+    k_emb, k_s, k_x = jax.random.split(rng, 3)
+    scale = 0.02 / (2 * cfg.n_layers) ** 0.5
+    return dict(
+        embed=cm.init_embedding(cfg, k_emb),
+        layers=tf.stack_layers(
+            lambda r: tf.init_block(cfg, r), k_s, n_seg * n_self),
+        cross=tf.stack_layers(
+            lambda r: init_cross_block(cfg, r, scale), k_x, n_seg),
+    )
+
+
+def param_specs(cfg: ModelConfig):
+    return dict(embed=cm.embedding_specs(cfg),
+                layers=tf.stacked_specs(tf.block_specs(cfg)),
+                cross=tf.stacked_specs(cross_block_specs(cfg)))
+
+
+def _cross_kv(cfg: ModelConfig, p, ctx):
+    dt = cfg.dtype
+    k = jnp.einsum("btd,dhk->bthk", ctx, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", ctx, p["wv"].astype(dt))
+    return k, v
+
+
+def _cross_apply(cfg: ModelConfig, p, x, ck, cv):
+    """Gated cross-attention block; ck/cv precomputed image K/V."""
+    h = cm.rmsnorm(x, p["norm1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wq"].astype(cfg.dtype))
+    q = shard(q, "batch", None, "heads", None)
+    o = cm.attention(cfg, q, ck, cv, causal=False)
+    x = x + jnp.tanh(p["gate_attn"]) * cm.attn_out(cfg, p["attn"], o)
+    h = cm.rmsnorm(x, p["norm2"], cfg.norm_eps)
+    x = x + jnp.tanh(p["gate_mlp"]) * cm.mlp(cfg, p["mlp"], h)
+    return x
+
+
+def forward(cfg: ModelConfig, params, tokens, ctx):
+    """tokens (B,S); ctx (B, n_ctx, d) precomputed patch embeddings."""
+    n_seg, n_self = _segments(cfg)
+    x = cm.embed(cfg, params["embed"], tokens)
+    ctx = shard(ctx.astype(cfg.dtype), "batch", None, None)
+    positions = jnp.arange(tokens.shape[1])[None, :]
+    lp = jax.tree_util.tree_map(
+        lambda a: a.reshape(n_seg, n_self, *a.shape[1:]),
+        cm.cast_params(cfg, params["layers"]))
+
+    @jax.checkpoint
+    def body(x, layer_p):
+        return tf.block_fwd(cfg, layer_p, x, positions), None
+
+    for seg in range(n_seg):
+        x, _ = jax.lax.scan(
+            body, x, jax.tree_util.tree_map(lambda a: a[seg], lp))
+        pc = jax.tree_util.tree_map(lambda a: a[seg], params["cross"])
+        ck, cv = _cross_kv(cfg, pc["attn"], ctx)
+        x = _cross_apply(cfg, pc, x, ck, cv)
+    return cm.logits(cfg, params["embed"], x)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    n_seg, n_self = _segments(cfg)
+    shape = (n_seg * n_self, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    xshape = (n_seg, batch, cfg.n_ctx_tokens, cfg.n_kv_heads, cfg.head_dim)
+    return dict(k=jnp.zeros(shape, cfg.dtype), v=jnp.zeros(shape, cfg.dtype),
+                xk=jnp.zeros(xshape, cfg.dtype),
+                xv=jnp.zeros(xshape, cfg.dtype),
+                length=jnp.zeros((batch,), jnp.int32))
+
+
+def cache_specs(cfg: ModelConfig, *, shard_seq: bool = True):
+    kv = (None, "batch", "kv_seq" if shard_seq else None, "kv_heads", None)
+    return dict(k=kv, v=kv, xk=kv, xv=kv, length=(None,))
+
+
+def fill_cross_cache(cfg: ModelConfig, params, cache, ctx):
+    """Precompute per-segment image K/V (prefill side)."""
+    ctx = ctx.astype(cfg.dtype)
+    ks, vs = [], []
+    for seg in range(params["cross"]["gate_attn"].shape[0]):
+        pc = jax.tree_util.tree_map(lambda a: a[seg], params["cross"])
+        k, v = _cross_kv(cfg, pc["attn"], ctx)
+        ks.append(k)
+        vs.append(v)
+    return dict(cache, xk=jnp.stack(ks).astype(cfg.dtype),
+                xv=jnp.stack(vs).astype(cfg.dtype))
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    n_seg, n_self = _segments(cfg)
+    x = cm.embed(cfg, params["embed"], tokens[:, None])
+    lengths = cache["length"]
+    lp = jax.tree_util.tree_map(
+        lambda a: a.reshape(n_seg, n_self, *a.shape[1:]), params["layers"])
+    kv = jax.tree_util.tree_map(
+        lambda a: a.reshape(n_seg, n_self, *a.shape[1:]),
+        dict(k=cache["k"], v=cache["v"]))
+
+    def body(x, scan_in):
+        layer_p, kv1 = scan_in
+        kv1, x = tf.decode_block(cfg, layer_p, kv1, x, lengths)
+        return x, kv1
+
+    outs = []
+    for seg in range(n_seg):
+        x, kv_out = jax.lax.scan(
+            body, x, (jax.tree_util.tree_map(lambda a: a[seg], lp),
+                      jax.tree_util.tree_map(lambda a: a[seg], kv)))
+        outs.append(kv_out)
+        pc = jax.tree_util.tree_map(lambda a: a[seg], params["cross"])
+        x = _cross_apply(cfg, pc, x, cache["xk"][seg], cache["xv"][seg])
+    stackf = lambda lst: jax.tree_util.tree_map(lambda *a: jnp.stack(a), *lst)
+    kv_new = jax.tree_util.tree_map(
+        lambda a: a.reshape(n_seg * n_self, *a.shape[2:]), stackf(outs))
+    out = cm.logits(cfg, params["embed"], x)[:, 0]
+    return out, dict(k=kv_new["k"], v=kv_new["v"], xk=cache["xk"],
+                     xv=cache["xv"], length=lengths + 1)

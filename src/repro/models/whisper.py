@@ -1,0 +1,174 @@
+"""Whisper-large-v3-style encoder-decoder backbone (audio).
+
+Per the assignment the conv frontend is a STUB: ``input_specs()``
+provides precomputed frame embeddings (B, n_frames, d) — the encoder
+consumes them directly.  Encoder: bidirectional self-attention blocks.
+Decoder: causal self-attention + cross-attention over encoder output +
+FFN, every layer.  MHA (n_kv_heads == n_heads == 20); on a 16-way
+'model' axis the 20 heads replicate (divisibility fallback) while the
+5120-wide FFN shards — see DESIGN.md §Arch-applicability.
+
+Decode: self-attn KV cache + encoder K/V precomputed at prefill.
+Encoder-decoder models have no single-stream "prefill"; the serve
+path is encode() then decode_step().
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.common import ModelConfig
+from repro.models import transformer as tf
+from repro.parallel.axes import shard
+
+
+def init_dec_block(cfg: ModelConfig, rng):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    scale = 0.02 / (2 * cfg.n_layers) ** 0.5
+    return dict(
+        norm1=jnp.ones((cfg.d_model,), jnp.float32),
+        attn=cm.init_attn(cfg, k1, scale),
+        norm_x=jnp.ones((cfg.d_model,), jnp.float32),
+        xattn=cm.init_attn(cfg, k2, scale),
+        norm2=jnp.ones((cfg.d_model,), jnp.float32),
+        mlp=cm.init_mlp(cfg, k3, scale, kind="gelu"),
+    )
+
+
+def dec_block_specs(cfg: ModelConfig):
+    return dict(norm1=(None,), attn=cm.attn_specs(cfg), norm_x=(None,),
+                xattn=cm.attn_specs(cfg), norm2=(None,),
+                mlp=cm.mlp_specs("gelu"))
+
+
+def init_params(cfg: ModelConfig, rng):
+    k_emb, k_enc, k_dec = jax.random.split(rng, 3)
+    scale = 0.02 / (2 * cfg.n_layers) ** 0.5
+    return dict(
+        embed=cm.init_embedding(cfg, k_emb),
+        enc=tf.stack_layers(
+            lambda r: tf.init_block(
+                cfg, r, mlp_init=lambda rr: cm.init_mlp(
+                    cfg, rr, scale, kind="gelu")),
+            k_enc, cfg.n_encoder_layers),
+        enc_norm=jnp.ones((cfg.d_model,), jnp.float32),
+        dec=tf.stack_layers(lambda r: init_dec_block(cfg, r), k_dec,
+                            cfg.n_layers),
+    )
+
+
+def param_specs(cfg: ModelConfig):
+    return dict(
+        embed=cm.embedding_specs(cfg),
+        enc=tf.stacked_specs(tf.block_specs(cfg, cm.mlp_specs("gelu"))),
+        enc_norm=(None,),
+        dec=tf.stacked_specs(dec_block_specs(cfg)))
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """frames (B, T_enc, d) stub embeddings -> encoder states."""
+    x = shard(frames.astype(cfg.dtype), "batch", None, None)
+    positions = jnp.arange(frames.shape[1])[None, :]
+
+    @jax.checkpoint
+    def body(x, lp):
+        h = cm.rmsnorm(x, lp["norm1"], cfg.norm_eps)
+        x = x + cm.self_attention(cfg, lp["attn"], h, positions,
+                                  causal=False)
+        h = cm.rmsnorm(x, lp["norm2"], cfg.norm_eps)
+        x = x + cm.mlp(cfg, lp["mlp"], h, kind="gelu")
+        return shard(x, "batch", None, None), None
+
+    x, _ = jax.lax.scan(body, x, cm.cast_params(cfg, params["enc"]))
+    return cm.rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_block_fwd(cfg: ModelConfig, lp, x, positions, enc):
+    h = cm.rmsnorm(x, lp["norm1"], cfg.norm_eps)
+    x = x + cm.self_attention(cfg, lp["attn"], h, positions)
+    h = cm.rmsnorm(x, lp["norm_x"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, lp["xattn"]["wq"].astype(cfg.dtype))
+    ek = jnp.einsum("btd,dhk->bthk", enc, lp["xattn"]["wk"].astype(cfg.dtype))
+    ev = jnp.einsum("btd,dhk->bthk", enc, lp["xattn"]["wv"].astype(cfg.dtype))
+    o = cm.attention(cfg, q, ek, ev, causal=False)
+    x = x + cm.attn_out(cfg, lp["xattn"], o)
+    h = cm.rmsnorm(x, lp["norm2"], cfg.norm_eps)
+    x = x + cm.mlp(cfg, lp["mlp"], h, kind="gelu")
+    return shard(x, "batch", None, None)
+
+
+def forward(cfg: ModelConfig, params, tokens, frames):
+    """Teacher-forced training: tokens (B,S) + frames (B,T_enc,d)."""
+    enc = encode(cfg, params, frames)
+    x = cm.embed(cfg, params["embed"], tokens)
+    positions = jnp.arange(tokens.shape[1])[None, :]
+
+    @jax.checkpoint
+    def body(x, lp):
+        return _dec_block_fwd(cfg, lp, x, positions, enc), None
+
+    x, _ = jax.lax.scan(body, x, cm.cast_params(cfg, params["dec"]))
+    return cm.logits(cfg, params["embed"], x)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    xshape = (cfg.n_layers, batch, cfg.n_ctx_tokens, cfg.n_kv_heads,
+              cfg.head_dim)
+    return dict(k=jnp.zeros(shape, cfg.dtype), v=jnp.zeros(shape, cfg.dtype),
+                xk=jnp.zeros(xshape, cfg.dtype),
+                xv=jnp.zeros(xshape, cfg.dtype),
+                length=jnp.zeros((batch,), jnp.int32))
+
+
+def cache_specs(cfg: ModelConfig, *, shard_seq: bool = True):
+    kv = (None, "batch", "kv_seq" if shard_seq else None, "kv_heads", None)
+    return dict(k=kv, v=kv, xk=kv, xv=kv, length=(None,))
+
+
+def fill_cross_cache(cfg: ModelConfig, params, cache, frames):
+    enc = encode(cfg, params, frames)
+
+    def one(lp):
+        ek = jnp.einsum("btd,dhk->bthk", enc,
+                        lp["xattn"]["wk"].astype(cfg.dtype))
+        ev = jnp.einsum("btd,dhk->bthk", enc,
+                        lp["xattn"]["wv"].astype(cfg.dtype))
+        return ek, ev
+
+    ks, vs = jax.lax.map(one, params["dec"])
+    return dict(cache, xk=ks.astype(cfg.dtype), xv=vs.astype(cfg.dtype))
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    x = cm.embed(cfg, params["embed"], tokens[:, None])
+    lengths = cache["length"]
+
+    def body2(x, scan_in):
+        lp, kv, xk, xv = scan_in
+        h = cm.rmsnorm(x, lp["norm1"], cfg.norm_eps)
+        q, k_new, v_new = cm.attn_qkv(cfg, lp["attn"], h, lengths[:, None])
+        upd = lambda c, n: jax.vmap(
+            lambda cb, nb, lb: jax.lax.dynamic_update_slice_in_dim(
+                cb, nb.astype(cb.dtype), lb, axis=0))(c, n, lengths)
+        # pin cache layout (see transformer.decode_block)
+        pin = lambda c: shard(c, "batch", "kv_seq", "kv_heads", None)
+        kv = dict(k=pin(upd(kv["k"], k_new)), v=pin(upd(kv["v"], v_new)))
+        o = tf.attention_over_cache(cfg, q, kv["k"], kv["v"], lengths + 1)
+        x = x + cm.attn_out(cfg, lp["attn"], o)
+        h = cm.rmsnorm(x, lp["norm_x"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h,
+                       lp["xattn"]["wq"].astype(cfg.dtype))
+        o = cm.attention(cfg, q, xk, xv, causal=False)
+        x = x + cm.attn_out(cfg, lp["xattn"], o)
+        h = cm.rmsnorm(x, lp["norm2"], cfg.norm_eps)
+        x = x + cm.mlp(cfg, lp["mlp"], h, kind="gelu")
+        return x, kv
+
+    x, kv = jax.lax.scan(
+        body2, x, (params["dec"], dict(k=cache["k"], v=cache["v"]),
+                   cache["xk"], cache["xv"]))
+    out = cm.logits(cfg, params["embed"], x)[:, 0]
+    return out, dict(k=kv["k"], v=kv["v"], xk=cache["xk"], xv=cache["xv"],
+                     length=lengths + 1)

@@ -1,0 +1,372 @@
+"""xLSTM (xlstm-1.3b): mLSTM + sLSTM blocks [arXiv:2405.04517].
+
+Layout: ``slstm_every``-periodic — each segment is (slstm_every - 1)
+mLSTM blocks followed by one sLSTM block (48 layers = 6 segments of
+7 mLSTM + 1 sLSTM).  mLSTM segments run under `lax.scan` over stacked
+params; sLSTM blocks are individual (their recurrence scans over time).
+
+mLSTM (matrix-memory LSTM, exponential gating):
+    C_t = f_t C_{t-1} + i_t v_t k_t^T ;  n_t = f_t n_{t-1} + i_t k_t
+    h_t = C_t q_t / max(|n_t . q_t|, 1)
+with log-domain stabilizer m_t.  Training uses the quadratic parallel
+form, *query-chunked* like flash attention so peak score memory is
+(B, H, chunk, S); decode is the O(1) recurrent update — this is what
+makes the 500k-token decode cell tractable (state is (H, dh, dh), not
+a KV cache).
+
+sLSTM (scalar-memory, recurrent gating) is inherently sequential —
+implemented as `lax.scan` over time.
+
+TP: heads are few (4) and do not divide a 16-way 'model' axis; the
+value/output dimension carries the tensor parallelism instead (logical
+axis 'state' on dh), which shards C on its value row dim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.common import ModelConfig
+from repro.parallel.axes import shard
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    h = cfg.n_heads
+    dh = d_in // h
+    return d_in, h, dh
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+
+
+def init_mlstm(cfg: ModelConfig, rng, scale: float):
+    """Official mLSTM block shape: one up-projection d -> 2*d_in, then
+    per-head *block-diagonal* q/k/v over the up-projected halves (this
+    is what makes the published 1.3B size work; dense d->d_in q/k/v
+    would nearly double the block)."""
+    d = cfg.d_model
+    d_in, h, dh = _dims(cfg)
+    ks = jax.random.split(rng, 6)
+    bd = lambda k: jax.random.normal(k, (h, dh, dh), jnp.float32) * scale
+    return dict(
+        norm=jnp.ones((d,), jnp.float32),
+        w_up=jax.random.normal(ks[0], (d, 2 * d_in), jnp.float32) * scale,
+        wq=bd(ks[1]), wk=bd(ks[2]), wv=bd(ks[3]),
+        wif=jax.random.normal(ks[4], (d, h, 2), jnp.float32) * 0.02,
+        bif=jnp.concatenate([jnp.zeros((h, 1)), 3.0 * jnp.ones((h, 1))],
+                            axis=1).astype(jnp.float32),
+        wo=jax.random.normal(ks[5], (h, dh, d), jnp.float32) * scale,
+    )
+
+
+def mlstm_specs(cfg: ModelConfig):
+    return dict(norm=(None,), w_up=("fsdp", "state"),
+                wq=("heads", None, "state"), wk=("heads", None, "state"),
+                wv=("heads", None, "state"),
+                wif=("fsdp", None, None), bif=(None, None),
+                wo=("heads", "state", "fsdp"))
+
+
+def _mlstm_parallel(q, k, v, logi, logf, chunk: int = 1024):
+    """Stabilized quadratic mLSTM, scanned over query chunks.
+
+    q,k,v (B,S,H,dh); logi/logf (B,S,H).  Returns (B,S,H,dh) fp32.
+    """
+    b, s, h, dh = q.shape
+    scale = 1.0 / (dh ** 0.5)
+    cumf = jnp.cumsum(logf, axis=1)                     # (B,S,H)
+    chunk = min(chunk, max(-(-s // 128) * 128, 128))   # no padding waste
+    nq = -(-s // chunk)
+    s_pad = nq * chunk
+    padq = lambda x: jnp.pad(
+        x, ((0, 0), (0, s_pad - s)) + ((0, 0),) * (x.ndim - 2))
+    qc = padq(q).reshape(b, nq, chunk, h, dh).transpose(1, 0, 2, 3, 4)
+    cumf_c = padq(cumf).reshape(b, nq, chunk, h).transpose(1, 0, 2, 3)
+    # key-side term: log i_j - F_j  (B,S,H)
+    kterm = logi - cumf
+
+    # §Perf iteration 5: 4 mLSTM heads cannot shard a 16-way 'model'
+    # axis — without sequence parallelism every model shard recomputes
+    # the full (B,c,S,H) decay matrix (measured useful-ratio 0.06 on
+    # prefill_32k).  Shard the query-chunk rows over 'model' instead.
+    from repro.models.common import heads_tp_available
+    seq_par = not heads_tp_available(h)
+
+    def body(_, args):
+        i, qi, cfi = args                               # (B,c,H,dh),(B,c,H)
+        if seq_par:
+            qi = shard(qi, "batch", "seq", None, None)
+            cfi = shard(cfi, "batch", "seq", None)
+        # logD_ij = F_i + (log i_j - F_j), masked to j <= i_abs
+        logd = cfi[:, :, None, :] + kterm[:, None, :, :]   # (B,c,S,H)
+        if seq_par:
+            logd = shard(logd, "batch", "seq", None, None)
+        jpos = jnp.arange(s)[None, None, :, None]
+        ipos = (i * chunk + jnp.arange(chunk))[None, :, None, None]
+        logd = jnp.where(jpos <= ipos, logd, -jnp.inf)
+        m = jnp.max(logd, axis=2, keepdims=True)        # (B,c,1,H)
+        m = jnp.where(jnp.isfinite(m), m, 0.0)
+        dmat = jnp.exp(logd - m)
+        sc = jnp.einsum("bchd,bshd->bcsh", qi.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+        sd = sc * dmat
+        norm = jnp.maximum(jnp.abs(jnp.sum(sd, axis=2)),
+                           jnp.exp(-m[:, :, 0, :]))     # (B,c,H)
+        # §Perf iter 1: the decay-weighted score matrix crosses HBM in
+        # bf16 (normalizer stats stay fp32) — score-sized traffic is
+        # the dominant roofline term of the mLSTM parallel form.
+        pdt = cm._probs_dtype()
+        out = jnp.einsum("bcsh,bshd->bchd", sd.astype(pdt),
+                         v.astype(pdt),
+                         preferred_element_type=jnp.float32)
+        return None, out / norm[..., None]
+
+    _, oc = jax.lax.scan(body, None, (jnp.arange(nq), qc, cumf_c))
+    o = oc.transpose(1, 0, 2, 3, 4).reshape(b, s_pad, h, dh)
+    return o[:, :s]
+
+
+def _mlstm_proj(cfg: ModelConfig, p, z):
+    """Shared projection path: up-project, per-head q/k/v, gates."""
+    dt = cfg.dtype
+    d_in, h, dh = _dims(cfg)
+    up = z @ p["w_up"].astype(dt)                        # (..., 2*d_in)
+    xa, zg = jnp.split(up, 2, axis=-1)
+    xh = xa.reshape(*xa.shape[:-1], h, dh)
+    q = jnp.einsum("...hk,hkl->...hl", xh, p["wq"].astype(dt))
+    k = jnp.einsum("...hk,hkl->...hl", xh, p["wk"].astype(dt))
+    v = jnp.einsum("...hk,hkl->...hl", xh, p["wv"].astype(dt))
+    gates = jnp.einsum("...d,dhg->...hg", z.astype(jnp.float32),
+                       p["wif"].astype(jnp.float32)) + p["bif"]
+    logi = gates[..., 0]                                 # log input gate
+    logf = jax.nn.log_sigmoid(gates[..., 1])             # log forget gate
+    return q, k, v, zg, logi, logf
+
+
+def mlstm_fwd(cfg: ModelConfig, p, x):
+    dt = cfg.dtype
+    z = cm.rmsnorm(x, p["norm"], cfg.norm_eps)
+    q, k, v, zg, logi, logf = _mlstm_proj(cfg, p, z)
+    v = shard(v, "batch", None, "heads", None)
+    o = _mlstm_parallel(q, k, v, logi, logf)
+    g = jax.nn.silu(zg)
+    b, s, _, _ = o.shape
+    o = o.astype(dt) * g.reshape(b, s, cfg.n_heads, -1)
+    return x + jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(dt))
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int):
+    _, h, dh = _dims(cfg)
+    return dict(C=jnp.zeros((batch, h, dh, dh), jnp.float32),
+                n=jnp.zeros((batch, h, dh), jnp.float32),
+                m=jnp.full((batch, h), -1e30, jnp.float32))
+
+
+def mlstm_step(cfg: ModelConfig, p, state, x):
+    """x (B,d) one token; recurrent O(1) update."""
+    dt = cfg.dtype
+    z = cm.rmsnorm(x, p["norm"], cfg.norm_eps)
+    q, k, v, zg, logi, logf = _mlstm_proj(cfg, p, z)
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    dh = q.shape[-1]
+    m_new = jnp.maximum(logf + state["m"], logi)
+    fp = jnp.exp(logf + state["m"] - m_new)[..., None]
+    ip = jnp.exp(logi - m_new)[..., None]
+    n = fp * state["n"] + ip * k
+    C = (fp[..., None] * state["C"]
+         + ip[..., None] * v[..., :, None] * k[..., None, :])
+    denom = jnp.maximum(jnp.abs(jnp.sum(n * q, -1)), jnp.exp(-m_new))
+    o = jnp.einsum("bhvk,bhk->bhv", C, q / (dh ** 0.5)) / denom[..., None]
+    g = jax.nn.silu(zg).astype(jnp.float32)
+    o = o * g.reshape(g.shape[0], cfg.n_heads, -1)
+    y = x + jnp.einsum("bhk,hkd->bd", o.astype(dt), p["wo"].astype(dt))
+    return dict(C=C, n=n, m=m_new), y
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+
+
+def _sdims(cfg: ModelConfig):
+    """sLSTM operates at d_model width (official block shape)."""
+    return cfg.d_model, cfg.n_heads, cfg.d_model // cfg.n_heads
+
+
+def init_slstm(cfg: ModelConfig, rng, scale: float):
+    d = cfg.d_model
+    d_in, h, dh = _sdims(cfg)
+    ks = jax.random.split(rng, 4)
+    return dict(
+        norm=jnp.ones((d,), jnp.float32),
+        wx=jax.random.normal(ks[0], (d, 4, d_in), jnp.float32) * scale,
+        # recurrent mixing is block-diagonal per head
+        rh=jax.random.normal(ks[1], (h, dh, 4, dh), jnp.float32) * scale,
+        b=jnp.zeros((4, d_in), jnp.float32),
+        wo=jax.random.normal(ks[2], (d_in, d), jnp.float32) * scale,
+    )
+
+
+def slstm_specs(cfg: ModelConfig):
+    return dict(norm=(None,), wx=("fsdp", None, "state"),
+                rh=("heads", None, None, "state"), b=(None, "state"),
+                wo=("state", "fsdp"), )
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    d_in, h, dh = _sdims(cfg)
+    z = jnp.zeros((batch, d_in), jnp.float32)
+    return dict(c=z, n=z, h=z,
+                m=jnp.full((batch, d_in), -1e30, jnp.float32))
+
+
+def _slstm_cell(cfg: ModelConfig, p, state, xt):
+    """xt (B, 4, d_in) precomputed input contributions."""
+    _, h_heads, dh = _sdims(cfg)
+    b = xt.shape[0]
+    hprev = state["h"].reshape(b, h_heads, dh)
+    rec = jnp.einsum("bhk,hkgl->bhgl", hprev,
+                     p["rh"].astype(jnp.float32)).reshape(b, 4, -1)
+    za, ia, fa, oa = jnp.moveaxis(
+        xt + rec + p["b"].astype(jnp.float32), 1, 0)
+    z = jnp.tanh(za)
+    o = jax.nn.sigmoid(oa)
+    logi, logf = ia, jax.nn.log_sigmoid(fa)
+    m_new = jnp.maximum(logf + state["m"], logi)
+    fp = jnp.exp(logf + state["m"] - m_new)
+    ip = jnp.exp(logi - m_new)
+    c = fp * state["c"] + ip * z
+    n = fp * state["n"] + ip
+    hnew = o * c / jnp.maximum(n, 1.0)
+    return dict(c=c, n=n, h=hnew, m=m_new), hnew
+
+
+def slstm_fwd(cfg: ModelConfig, p, x):
+    """Sequential over time (inherent to sLSTM).  x (B,S,d)."""
+    b, s, d = x.shape
+    z = cm.rmsnorm(x, p["norm"], cfg.norm_eps)
+    xg = jnp.einsum("bsd,dgk->sbgk", z.astype(jnp.float32),
+                    p["wx"].astype(jnp.float32))
+    state = init_slstm_state(cfg, b)
+
+    def body(st, xt):
+        st, h = _slstm_cell(cfg, p, st, xt)
+        return st, h
+
+    _, hs = jax.lax.scan(body, state, xg)
+    hs = hs.transpose(1, 0, 2).astype(cfg.dtype)        # (B,S,d_in)
+    return x + hs @ p["wo"].astype(cfg.dtype)
+
+
+def slstm_step(cfg: ModelConfig, p, state, x):
+    z = cm.rmsnorm(x, p["norm"], cfg.norm_eps)
+    xg = jnp.einsum("bd,dgk->bgk", z.astype(jnp.float32),
+                    p["wx"].astype(jnp.float32))
+    state, h = _slstm_cell(cfg, p, state, xg)
+    return state, x + (h.astype(cfg.dtype) @ p["wo"].astype(cfg.dtype))
+
+
+# ---------------------------------------------------------------------------
+# full model
+
+
+def _segments(cfg: ModelConfig):
+    per = cfg.slstm_every
+    assert cfg.n_layers % per == 0, (cfg.n_layers, per)
+    return cfg.n_layers // per, per - 1
+
+
+def init_params(cfg: ModelConfig, rng):
+    n_seg, n_m = _segments(cfg)
+    k_emb, k_m, k_s = jax.random.split(rng, 3)
+    scale = 0.02 / (2 * cfg.n_layers) ** 0.5
+    from repro.models.transformer import stack_layers
+    return dict(
+        embed=cm.init_embedding(cfg, k_emb),
+        mlstm=stack_layers(lambda r: init_mlstm(cfg, r, scale), k_m,
+                           n_seg * n_m),
+        slstm=stack_layers(lambda r: init_slstm(cfg, r, scale), k_s, n_seg),
+    )
+
+
+def param_specs(cfg: ModelConfig):
+    from repro.models.transformer import stacked_specs
+    return dict(embed=cm.embedding_specs(cfg),
+                mlstm=stacked_specs(mlstm_specs(cfg)),
+                slstm=stacked_specs(slstm_specs(cfg)))
+
+
+def forward(cfg: ModelConfig, params, tokens):
+    n_seg, n_m = _segments(cfg)
+    x = cm.embed(cfg, params["embed"], tokens)
+    mparams = jax.tree_util.tree_map(
+        lambda a: a.reshape(n_seg, n_m, *a.shape[1:]),
+        cm.cast_params(cfg, params["mlstm"]))
+
+    @jax.checkpoint
+    def mbody(x, lp):
+        return mlstm_fwd(cfg, lp, x), None
+
+    for seg in range(n_seg):
+        seg_p = jax.tree_util.tree_map(lambda a: a[seg], mparams)
+        x, _ = jax.lax.scan(mbody, x, seg_p)
+        x = slstm_fwd(cfg, jax.tree_util.tree_map(
+            lambda a: a[seg], params["slstm"]), x)
+    return cm.logits(cfg, params["embed"], x)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int = 0):
+    """Recurrent state — O(1) in sequence length (the 500k cell)."""
+    n_seg, n_m = _segments(cfg)
+    rep = lambda st, n: jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (n,) + a.shape), st)
+    return dict(mlstm=rep(init_mlstm_state(cfg, batch), n_seg * n_m),
+                slstm=rep(init_slstm_state(cfg, batch), n_seg),
+                length=jnp.zeros((batch,), jnp.int32))
+
+
+def cache_specs(cfg: ModelConfig, *, shard_seq: bool = True):
+    return dict(
+        mlstm=dict(C=(None, "batch", "heads", "state", None),
+                   n=(None, "batch", "heads", None),
+                   m=(None, "batch", "heads")),
+        slstm=dict(c=(None, "batch", "state"), n=(None, "batch", "state"),
+                   h=(None, "batch", "state"), m=(None, "batch", "state")),
+        length=(None,))
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    n_seg, n_m = _segments(cfg)
+    x = cm.embed(cfg, params["embed"], tokens[:, None])[:, 0]
+    mstates = cache["mlstm"]
+
+    def mbody(x, scan_in):
+        lp, st = scan_in
+        st, x = mlstm_step(cfg, lp, st, x)
+        return x, st
+
+    new_m, new_s = [], []
+    mp = jax.tree_util.tree_map(
+        lambda a: a.reshape(n_seg, n_m, *a.shape[1:]), params["mlstm"])
+    ms = jax.tree_util.tree_map(
+        lambda a: a.reshape(n_seg, n_m, *a.shape[1:]), mstates)
+    for seg in range(n_seg):
+        x, st_out = jax.lax.scan(
+            mbody, x, (jax.tree_util.tree_map(lambda a: a[seg], mp),
+                       jax.tree_util.tree_map(lambda a: a[seg], ms)))
+        new_m.append(st_out)
+        sp = jax.tree_util.tree_map(lambda a: a[seg], params["slstm"])
+        sst = jax.tree_util.tree_map(lambda a: a[seg], cache["slstm"])
+        sst, x = slstm_step(cfg, sp, sst, x)
+        new_s.append(sst)
+    out = cm.logits(cfg, params["embed"], x[:, None])[:, 0]
+    stackf = lambda lst: jax.tree_util.tree_map(
+        lambda *a: jnp.stack(a), *lst)
+    cat_m = jax.tree_util.tree_map(
+        lambda a: a.reshape(n_seg * n_m, *a.shape[2:]), stackf(new_m))
+    return out, dict(mlstm=cat_m, slstm=stackf(new_s),
+                     length=cache["length"] + 1)

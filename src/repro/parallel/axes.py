@@ -1,0 +1,181 @@
+"""Logical-axis sharding system.
+
+Models annotate arrays with *logical* axis names; the launcher maps
+those names onto physical mesh axes.  This keeps every model definition
+mesh-agnostic: the same code lowers on 1 CPU device (all rules empty),
+a 16x16 single pod, or the (2, 16, 16) multi-pod production mesh —
+pod-count scaling is a rules change, not a code change.
+
+Logical axes used across the framework:
+
+* ``batch``    — data-parallel batch dim -> ('pod', 'data')
+* ``fsdp``     — parameter / optimizer-state sharding (ZeRO-3) -> 'data'
+  (+ 'pod' for giant archs; see rules presets)
+* ``heads``    — attention-head tensor parallelism -> 'model'
+* ``kv_heads`` — GQA KV heads -> 'model' *only if divisible*
+* ``mlp``      — FFN hidden dim -> 'model'
+* ``vocab``    — embedding / logits vocab dim -> 'model'
+* ``experts``  — MoE expert dim -> 'model' if divisible (EP), else the
+  per-expert ``mlp`` dim carries the TP (grok-style 8e on 16-way TP)
+* ``seq``      — sequence-parallel activations / sharded KV cache
+* ``state``    — SSM value-dim tensor parallelism (xLSTM / Mamba2)
+
+Divisibility fallback: `resolve()` drops a mesh axis whose size does
+not divide the array dim (replicating instead of uneven sharding), so
+e.g. whisper's 20 heads simply replicate on a 16-way 'model' axis while
+its 5120 FFN still shards.  The decision is static (shapes are static)
+and logged once per unique (name, dim) by the dry-run.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _rules() -> Mapping[str, tuple[str, ...]]:
+    return getattr(_state, "rules", {})
+
+
+def _mesh() -> Mesh | None:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def sharding_rules(mesh: Mesh | None, rules: Mapping[str, Sequence[str]]):
+    """Install logical->physical axis rules for the enclosed scope."""
+    prev = (_mesh(), _rules())
+    _state.mesh = mesh
+    _state.rules = {k: tuple(v) if not isinstance(v, str) else (v,)
+                    for k, v in rules.items()}
+    try:
+        yield
+    finally:
+        _state.mesh, _state.rules = prev
+
+
+#: rules presets -----------------------------------------------------------
+
+def single_pod_rules() -> dict:
+    # kv_seq lists both axes: under the first-dim-wins dedup in
+    # resolve(), a batch-sharded decode cache gets seq over 'model'
+    # (flash-decoding split-KV), while the batch=1 long-context cell
+    # gets seq over BOTH axes (256-way KV sharding).
+    return dict(batch=("data",), fsdp=("data",), embed=("data",),
+                heads=("model",), kv_heads=("model",), mlp=("model",),
+                vocab=("model",), experts=("model",), seq=("model",),
+                state=("model",), kv_seq=("data", "model"))
+
+
+def multi_pod_rules() -> dict:
+    r = single_pod_rules()
+    r["batch"] = ("pod", "data")
+    r["fsdp"] = ("pod", "data")
+    r["embed"] = ("pod", "data")
+    r["kv_seq"] = ("pod", "data", "model")
+    return r
+
+
+def serve_rules(multi_pod: bool = False) -> dict:
+    """Weight-stationary serving layout (§Perf iteration 2).
+
+    Training shards parameters over 'data' (ZeRO/FSDP) and re-gathers
+    them per layer — amortized over a big batch that is fine, but at
+    decode it moves the ENTIRE model across the mesh every step
+    (measured: 1.78 s collective term for arctic-480b/decode_32k,
+    ~58 GB of expert weights per step).  For serving, parameters are
+    instead sharded over BOTH mesh axes and never gathered: 'fsdp' is
+    dropped and the FFN/expert-hidden dim picks up the 'data' axis.
+    Activations (tiny at decode) move instead of weights.
+    """
+    r = single_pod_rules()
+    r["fsdp"] = ()
+    r["embed"] = ("data",)     # weights stay resident, 256-way with TP
+    r["mlp"] = ("data", "model")
+    r["state"] = ("data", "model")
+    r["__serving__"] = ()          # mode marker, see serving_mode()
+    if multi_pod:
+        r["batch"] = ("pod", "data")
+        r["kv_seq"] = ("pod", "data", "model")
+        r["mlp"] = ("pod", "data", "model")
+    return r
+
+
+def serving_mode() -> bool:
+    """True when the installed rules are the serving preset."""
+    return "__serving__" in _rules()
+
+
+def _axis_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def resolve(names: Sequence[str | None],
+            shape: Sequence[int] | None = None) -> P:
+    """Logical axis names -> PartitionSpec under the installed rules.
+
+    With ``shape`` given, any mesh axis whose size does not divide the
+    corresponding dim is dropped (replication fallback).
+    """
+    rules, mesh = _rules(), _mesh()
+    if not rules:
+        return P()
+    sizes = _axis_sizes(mesh) if mesh is not None else {}
+    out, used = [], set()
+    for i, name in enumerate(names):
+        if name is None:
+            out.append(None)
+            continue
+        axes = tuple(ax for ax in rules.get(name, ()) if ax not in used)
+        if shape is not None and sizes:
+            keep, dim = [], shape[i]
+            for ax in axes:
+                sz = sizes.get(ax, 1)
+                if sz > 1 and dim % sz == 0:
+                    keep.append(ax)
+                    dim //= sz
+            axes = tuple(keep)
+        used.update(axes)
+        out.append(axes if len(axes) > 1 else (axes[0] if axes else None))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def shard(x, *names: str | None):
+    """`with_sharding_constraint` by logical names (no-op w/o rules)."""
+    if not _rules() or _mesh() is None:
+        return x
+    spec = resolve(names, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_mesh(), spec))
+
+
+def named_sharding(spec: P) -> NamedSharding:
+    mesh = _mesh()
+    assert mesh is not None, "no mesh installed"
+    return NamedSharding(mesh, spec)
+
+
+def spec_tree_to_shardings(spec_tree, shape_tree):
+    """Map a pytree of logical-name tuples to NamedShardings.
+
+    spec_tree leaves: tuple of logical names (or None) per array dim.
+    shape_tree leaves: arrays or ShapeDtypeStructs (for divisibility).
+    """
+    mesh = _mesh()
+    assert mesh is not None
+
+    def one(names, arr):
+        return NamedSharding(mesh, resolve(names, arr.shape))
+
+    return jax.tree_util.tree_map(
+        one, spec_tree, shape_tree,
+        is_leaf=lambda x: (isinstance(x, tuple)
+                           and all(isinstance(n, (str, type(None)))
+                                   for n in x)))

@@ -1,0 +1,98 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+TPU v5e hardware constants (per chip):
+    compute   197 TFLOP/s bf16
+    HBM       819 GB/s
+    ICI       ~50 GB/s per link
+
+Terms (seconds, per step, per chip — the partitioned module IS the
+per-chip program):
+
+    compute    = HLO_FLOPs_dev / 197e12
+    memory     = HLO_bytes_dev / 819e9
+    collective = collective_bytes_dev / 50e9
+
+plus MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference), N_active for
+MoE, and the usefulness ratio MODEL_FLOPS / (HLO_FLOPs_dev × chips).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s / chip
+ICI_BW = 50e9             # bytes/s / link
+
+
+@dataclasses.dataclass(frozen=True)
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops_dev: float
+    hlo_bytes_dev: float
+    collective_bytes_dev: float
+    model_flops: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    useful_ratio: float
+    bytes_per_device: float        # peak memory from memory_analysis
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def make(arch: str, shape: str, mesh: str, chips: int, *,
+         cost: dict, collectives: dict, model_flops: float,
+         bytes_per_device: float) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = float(collectives["total_bytes"])
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = coll / ICI_BW
+    terms = dict(compute=compute_s, memory=memory_s,
+                 collective=collective_s)
+    bottleneck = max(terms, key=terms.get)
+    denom = flops * chips
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh, chips=chips,
+        hlo_flops_dev=flops, hlo_bytes_dev=byts,
+        collective_bytes_dev=coll, model_flops=model_flops,
+        compute_s=compute_s, memory_s=memory_s,
+        collective_s=collective_s, bottleneck=bottleneck,
+        useful_ratio=(model_flops / denom) if denom else 0.0,
+        bytes_per_device=bytes_per_device)
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS
+
+
+def count_params_struct(struct_tree) -> int:
+    return sum(int(x.size) if hasattr(x, "size") else 0
+               for x in jax.tree_util.tree_leaves(struct_tree))
+
+
+def count_active_params(struct_tree, top_k: int, n_experts: int) -> int:
+    """MoE-aware: expert tensors (key starts with 'we_') count k/E."""
+    total = 0
+    flat = jax.tree_util.tree_flatten_with_path(struct_tree)[0]
+    for path, leaf in flat:
+        size = int(leaf.size)
+        keyname = str(path[-1])
+        if "we_" in keyname and n_experts > 0:
+            size = size * top_k // n_experts
+        total += size
+    return total
+
+
+def model_flops(kind: str, n_active: int, tokens: int) -> float:
+    """6·N·D for training, 2·N·D for forward/decode."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active * tokens

@@ -1,0 +1,109 @@
+"""Batched serving engine with continuous batching.
+
+A fixed pool of ``n_slots`` decode slots runs one jitted decode step
+per tick over the *whole* pool (static shapes — the TPU-friendly
+formulation of continuous batching): finished or empty slots decode a
+pad token and are masked out; new requests are admitted into free
+slots between ticks by overwriting that slot's cache rows.
+
+The decode step is the same `api.decode` lowered by the dry-run, so
+the engine's cost model *is* the decode cell of the roofline table.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import ModelApi
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list          # token ids
+    max_new: int = 16
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, api: ModelApi, params, *, n_slots: int = 4,
+                 max_seq: int = 256, ctx=None, greedy: bool = True):
+        self.api = api
+        self.params = params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.cache = api.init_cache(n_slots, max_seq)
+        if api.needs_ctx:
+            assert ctx is not None, "modality ctx required"
+            self.cache = api.fill_ctx(params, self.cache, ctx)
+        self.slots: list[Request | None] = [None] * n_slots
+        self.queue: list[Request] = []
+        self.last_tok = np.zeros((n_slots,), np.int32)
+        self._remaining_prompt: list[list] = [[] for _ in range(n_slots)]
+        self.greedy = greedy
+        self._step = jax.jit(api.decode)
+
+    # -- admission ---------------------------------------------------------
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _reset_slot(self, s: int):
+        """Zero slot s's cache rows (length <- 0)."""
+        def zero_row(x):
+            if x.ndim >= 2 and x.shape[0] == self.n_slots:
+                return x.at[s].set(0)
+            if x.ndim >= 2 and x.shape[1] == self.n_slots:  # (L, B, ...)
+                return x.at[:, s].set(0)
+            return x
+        self.cache = jax.tree_util.tree_map(zero_row, self.cache)
+        self.cache["length"] = self.cache["length"].at[s].set(0)
+
+    def _admit(self):
+        for s in range(self.n_slots):
+            if self.slots[s] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[s] = req
+                self._reset_slot(s)
+                self.last_tok[s] = req.prompt[0]
+                self._remaining_prompt[s] = list(req.prompt[1:])
+
+    # -- decode tick ---------------------------------------------------------
+
+    def tick(self):
+        """One decode step over the slot pool."""
+        self._admit()
+        toks = jnp.asarray(self.last_tok)
+        logits, self.cache = self._step(self.params, self.cache, toks)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        for s, req in enumerate(self.slots):
+            if req is None:
+                continue
+            if self._remaining_prompt[s]:
+                # still force-feeding the prompt
+                self.last_tok[s] = self._remaining_prompt[s].pop(0)
+                continue
+            req.out.append(int(nxt[s]))
+            self.last_tok[s] = nxt[s]
+            if len(req.out) >= req.max_new:
+                req.done = True
+                self.slots[s] = None
+
+    def run(self, max_ticks: int = 1000) -> list[Request]:
+        done = []
+        pending = lambda: (self.queue
+                           or any(r is not None for r in self.slots))
+        ticks = 0
+        submitted = []
+        while pending() and ticks < max_ticks:
+            before = [r for r in self.slots if r is not None]
+            self.tick()
+            ticks += 1
+            for r in before:
+                if r.done and r not in done:
+                    done.append(r)
+        return done

@@ -1,0 +1,158 @@
+"""Sharded, atomic, resumable checkpointing.
+
+Layout::
+
+    <dir>/step_000100/
+        manifest.json          # step, leaf paths, shapes, dtypes
+        arrays/<flat.key>.npy  # one file per pytree leaf
+    <dir>/LATEST               # text file naming the newest complete step
+
+Write protocol (crash-safe): write into ``step_N.tmp/``, fsync,
+atomic-rename to ``step_N/``, then rewrite LATEST.  A partially
+written checkpoint can never be named by LATEST, so restart-from-latest
+is always consistent — the fault-tolerance contract the trainer and the
+preemption hook rely on.
+
+On a real multi-host cluster each host writes only its addressable
+shards and host 0 writes the manifest after a barrier; the single-host
+code path here is the degenerate case of that protocol (documented in
+DESIGN.md §fault-tolerance).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax
+import ml_dtypes
+import numpy as np
+
+#: numpy-unfriendly dtypes stored as raw bits + logical dtype name
+_BITCAST = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+            "float8_e5m2": np.uint8}
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}."))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}."))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _subtree(flat, key):
+    """Entries of `flat` under `key.` (or the exact `key` -> '')."""
+    out = {}
+    for kk, v in flat.items():
+        if kk == key:
+            out[""] = v
+        elif kk.startswith(key + "."):
+            out[kk[len(key) + 1:]] = v
+    return out
+
+
+def _unflatten_into(template, flat):
+    if isinstance(template, dict):
+        return {k: _unflatten_into(template[k], _subtree(flat, k))
+                for k in template}
+    if isinstance(template, (list, tuple)):
+        typ = type(template)
+        return typ(_unflatten_into(v, _subtree(flat, str(i)))
+                   for i, v in enumerate(template))
+    return flat[""]
+
+
+def save(directory: str, step: int, state) -> str:
+    """Atomically save a pytree `state` for `step`. Returns final path."""
+    os.makedirs(directory, exist_ok=True)
+    name = f"step_{step:08d}"
+    tmp = os.path.join(directory, name + ".tmp")
+    final = os.path.join(directory, name)
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    arrays_dir = os.path.join(tmp, "arrays")
+    os.makedirs(arrays_dir)
+    flat = _flatten(state)
+    manifest = dict(step=step, leaves={})
+    for key, val in flat.items():
+        arr = np.asarray(jax.device_get(val))
+        logical = str(arr.dtype)
+        if logical in _BITCAST:           # np.save can't cast these
+            arr = arr.view(_BITCAST[logical])
+        np.save(os.path.join(arrays_dir, key + ".npy"), arr)
+        manifest["leaves"][key] = dict(shape=list(arr.shape),
+                                       dtype=logical)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    with open(os.path.join(directory, "LATEST.tmp"), "w") as f:
+        f.write(name)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(os.path.join(directory, "LATEST.tmp"),
+               os.path.join(directory, "LATEST"))
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    latest = os.path.join(directory, "LATEST")
+    if not os.path.exists(latest):
+        return None
+    with open(latest) as f:
+        name = f.read().strip()
+    if not os.path.isdir(os.path.join(directory, name)):
+        return None
+    return int(name.split("_")[1])
+
+
+def restore(directory: str, template, step: int | None = None):
+    """Restore into the structure of `template` (shapes must match).
+
+    With sharding rules installed, leaves are placed according to the
+    template's shardings via `jax.device_put`.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat = {}
+    for key, meta in manifest["leaves"].items():
+        arr = np.load(os.path.join(path, "arrays", key + ".npy"))
+        if meta["dtype"] in _BITCAST:
+            arr = arr.view(getattr(ml_dtypes, meta["dtype"]))
+        flat[key] = arr
+    restored = _unflatten_into(template, flat)
+
+    def place(t, v):
+        arr = jax.numpy.asarray(v, dtype=t.dtype)
+        if hasattr(t, "sharding") and t.sharding is not None:
+            try:
+                return jax.device_put(arr, t.sharding)
+            except Exception:
+                return arr
+        return arr
+
+    return jax.tree_util.tree_map(place, template, restored), step
+
+
+def prune(directory: str, keep: int = 3):
+    """Delete all but the newest `keep` complete checkpoints."""
+    if not os.path.isdir(directory):
+        return
+    steps = sorted(d for d in os.listdir(directory)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)

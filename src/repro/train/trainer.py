@@ -1,0 +1,138 @@
+"""The training loop: step + checkpoint + fault tolerance, assembled.
+
+Single entry point used by `launch/train.py` and the examples.  The
+loop is mesh-agnostic: with sharding rules installed (launcher) the
+step is pjit-sharded; without (CPU smoke tests) it is a plain jit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import ModelApi
+from repro.parallel import compression
+from repro.train import checkpoint as ckpt
+from repro.train import fault_tolerance as ft
+from repro.train import optimizer as opt
+from repro.train.step import build_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str | None = None
+    ckpt_keep: int = 3
+    accum: int = 1
+    z_loss: float = 0.0
+    compress_grads: bool = False
+    log_every: int = 10
+    straggler_factor: float = 5.0
+
+
+class Trainer:
+    def __init__(self, api: ModelApi, opt_cfg: opt.AdamWConfig,
+                 tcfg: TrainerConfig, *, rng=None,
+                 log_fn: Callable[[str], None] = print):
+        self.api = api
+        self.opt_cfg = opt_cfg
+        self.tcfg = tcfg
+        self.log = log_fn
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self.params = api.init(rng)
+        self.opt_state = opt.init_state(opt_cfg, self.params)
+        self.step_idx = 0
+
+        self._ef = (compression.init_error_feedback(self.params)
+                    if tcfg.compress_grads else None)
+        base_step = build_train_step(api, opt_cfg, accum=tcfg.accum,
+                                     z_loss=tcfg.z_loss)
+        if tcfg.compress_grads:
+            from repro.train.step import build_loss_fn
+            loss_fn = build_loss_fn(api, z_loss=tcfg.z_loss)
+            grad_fn = jax.value_and_grad(loss_fn)
+
+            def step_fn(params, opt_state, ef, batch):
+                loss, grads = grad_fn(params, batch)
+                grads, ef = compression.compress_decompress(grads, ef)
+                params, opt_state, metrics = opt.apply_updates(
+                    opt_cfg, params, grads, opt_state)
+                return params, opt_state, ef, dict(metrics, loss=loss)
+
+            self._jit_step = jax.jit(step_fn, donate_argnums=(0, 1, 2))
+        else:
+            self._jit_step = jax.jit(
+                lambda p, s, b: base_step(p, s, b),
+                donate_argnums=(0, 1))
+
+    # -- checkpoint / resume -------------------------------------------------
+
+    def state(self):
+        return dict(params=self.params, opt=self.opt_state,
+                    step=jnp.asarray(self.step_idx))
+
+    def maybe_resume(self) -> bool:
+        d = self.tcfg.ckpt_dir
+        if not d:
+            return False
+        latest = ckpt.latest_step(d)
+        if latest is None:
+            return False
+        state, _ = ckpt.restore(d, self.state())
+        self.params = state["params"]
+        self.opt_state = state["opt"]
+        self.step_idx = int(state["step"])
+        self.log(f"[trainer] resumed from step {self.step_idx}")
+        return True
+
+    def save(self):
+        if not self.tcfg.ckpt_dir:
+            return
+        ckpt.save(self.tcfg.ckpt_dir, self.step_idx, self.state())
+        ckpt.prune(self.tcfg.ckpt_dir, self.tcfg.ckpt_keep)
+
+    # -- loop ----------------------------------------------------------------
+
+    def fit(self, batches: Iterable[dict]) -> dict:
+        tcfg = self.tcfg
+        watchdog = ft.StragglerWatchdog(timeout_factor=tcfg.straggler_factor)
+        losses = []
+        it = iter(batches)
+        with ft.PreemptionGuard() as guard:
+            while self.step_idx < tcfg.total_steps:
+                batch_np = next(it)
+                batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+                t0 = time.monotonic()
+                if tcfg.compress_grads:
+                    (self.params, self.opt_state, self._ef,
+                     metrics) = self._jit_step(
+                        self.params, self.opt_state, self._ef, batch)
+                else:
+                    self.params, self.opt_state, metrics = self._jit_step(
+                        self.params, self.opt_state, batch)
+                loss = float(metrics["loss"])
+                dt = time.monotonic() - t0
+                losses.append(loss)
+                self.step_idx += 1
+                if watchdog.observe(dt):
+                    self.log(f"[trainer] straggling at step "
+                             f"{self.step_idx}; checkpoint + restart")
+                    self.save()
+                    break
+                if self.step_idx % tcfg.log_every == 0:
+                    self.log(f"[trainer] step {self.step_idx:5d} "
+                             f"loss {loss:.4f} "
+                             f"({dt * 1e3:.0f} ms/step)")
+                if tcfg.ckpt_every and self.step_idx % tcfg.ckpt_every == 0:
+                    self.save()
+                if guard.preempted:
+                    self.log("[trainer] preemption requested; "
+                             "checkpointing and exiting")
+                    self.save()
+                    break
+        return dict(losses=losses, final_step=self.step_idx)

@@ -1,0 +1,72 @@
+"""Minimal property-based testing harness.
+
+`hypothesis` is not installable in this offline container (documented
+in DESIGN.md §testing); this module provides the subset we need:
+deterministic multi-seed random case generation with failure-case
+reporting.  Strategies are plain callables (rng -> value).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+
+def forall(n_cases: int = 50, seed: int = 0, **strategies):
+    """Decorator: run the test for `n_cases` random draws.
+
+    Each strategy is called with a numpy Generator; the drawn values
+    are passed as keyword args.  On failure the case index and drawn
+    values are attached to the assertion.
+    """
+    def deco(fn):
+        def wrapper():
+            # NOTE: signature intentionally empty — pytest must not
+            # mistake the strategy kwargs for fixtures.
+            for case in range(n_cases):
+                rng = np.random.default_rng(seed * 100003 + case)
+                drawn = {k: s(rng) for k, s in strategies.items()}
+                try:
+                    fn(**drawn)
+                except AssertionError as e:
+                    raise AssertionError(
+                        f"property failed on case {case}: "
+                        f"{ {k: _short(v) for k, v in drawn.items()} }"
+                    ) from e
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco
+
+
+def _short(v):
+    a = np.asarray(v)
+    if a.size > 8:
+        return f"array{a.shape}:{a.dtype}"
+    return v
+
+
+# -- strategies --------------------------------------------------------------
+
+def integers(lo: int, hi: int):
+    return lambda rng: int(rng.integers(lo, hi + 1))
+
+
+def uint32_arrays(max_len: int = 4096):
+    def strat(rng):
+        n = int(rng.integers(1, max_len + 1))
+        return rng.integers(0, 2 ** 32, size=n, dtype=np.uint32)
+    return strat
+
+
+def int32_grid(shape, lo=0, hi=100):
+    return lambda rng: rng.integers(lo, hi, size=shape, dtype=np.int32)
+
+
+def floats(lo=-1e3, hi=1e3):
+    return lambda rng: float(rng.uniform(lo, hi))
+
+
+def float_arrays(shape, scale=1.0):
+    return lambda rng: (rng.standard_normal(shape) * scale).astype(
+        np.float32)

@@ -1,0 +1,76 @@
+"""Cross-simulator clocking: aggregated models vs Listing 1(b) oracle."""
+import pytest
+
+from repro.core.clocking import (CLOCK_MODES, make_clock,
+                                 reference_listing_1b)
+from repro.core.timing import DEFAULT_PLATFORM
+
+from _proptest import forall, integers
+
+
+def test_picosecond_matches_listing_1b_exactly():
+    """The aggregated ClockModel reproduces the paper's per-cycle loop."""
+    clock = make_clock("picosecond")
+    traj = reference_listing_1b(5000)
+    for cycle1, (cpu_ps, dram_ps, dram_cycle) in enumerate(traj, start=1):
+        assert cpu_ps == cycle1 * clock.cpu_ps_per_clk
+        # Listing 1b: after the while loop, dramCycle is the first tick
+        # whose time has caught up with cpuPs
+        assert clock.cycle_to_tick(cycle1) == dram_cycle, cycle1
+        assert dram_ps == dram_cycle * clock.dram_ps_per_clk
+
+
+def test_frequency_ratios():
+    p = DEFAULT_PLATFORM
+    assert p.freq_ratio_ceil == 2
+    assert abs(p.freq_ratio_exact - 1.575) < 1e-3
+
+
+@pytest.mark.parametrize("mode", CLOCK_MODES)
+def test_ticks_per_window_bounds(mode):
+    clock = make_clock(mode)
+    for w in range(50):
+        n = clock.active_ticks_in_window(w)
+        assert 0 < n <= clock.ticks_per_window_static
+
+
+def test_broken_noscale_runs_dram_at_cpu_speed():
+    clock = make_clock("broken_noscale")
+    # one tick per cpu cycle; CPU perceives each tick as 476 ps
+    assert clock.cycle_to_tick(1000) == 1000
+    assert clock.tick_to_cpu_ps(1000) == 1000 * 476
+    # the memory simulator itself thinks 750 ps passed per tick: the
+    # CPU sees memory running 1.575x too fast
+    assert clock.tick_to_sim_ps(1000) == 750000
+
+
+def test_damov_ceil_runs_dram_at_half_cpu_speed():
+    clock = make_clock("damov_ceil")
+    assert clock.cycle_to_tick(1000) == 500     # freqRatio = 2
+    # => effective memory frequency 1.05 GHz instead of 1.333 GHz
+
+
+@forall(n_cases=100, cycle=integers(1, 10 ** 6))
+def test_cycle_to_tick_monotone_and_exact(cycle):
+    clock = make_clock("picosecond")
+    t0 = clock.cycle_to_tick(cycle)
+    t1 = clock.cycle_to_tick(cycle + 1)
+    assert t0 <= t1
+    # tick time must have caught up with the cycle's cpu time (the
+    # while-loop postcondition of Listing 1b)
+    assert t0 * 750 >= cycle * 476
+    assert (t0 - 1) * 750 < cycle * 476
+
+
+def test_bandwidth_ratio_between_modes():
+    """The paper's numbers: broken interface sees 1.575x bandwidth,
+    DAMOV ceil sees 0.7875x (=1.05/1.333) of the true rate."""
+    ps = make_clock("picosecond")
+    broken = make_clock("broken_noscale")
+    ceil = make_clock("damov_ceil")
+    n = 10 ** 6
+    # ticks available per unit of CPU time determine service rate
+    assert broken.cycle_to_tick(n) / ps.cycle_to_tick(n) == pytest.approx(
+        1.575, rel=1e-3)
+    assert ceil.cycle_to_tick(n) / ps.cycle_to_tick(n) == pytest.approx(
+        0.7875, rel=1e-3)

@@ -1,0 +1,65 @@
+"""Serving engine: continuous batching semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ModelConfig
+from repro.models.registry import get_model
+from repro.serve.engine import Engine, Request
+
+CFG = ModelConfig(name="t", n_layers=2, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=128, vocab=128, dtype=jnp.float32)
+
+
+def setup():
+    api = get_model(CFG)
+    params = api.init(jax.random.PRNGKey(0))
+    return api, params
+
+
+def test_engine_completes_all_requests():
+    api, params = setup()
+    eng = Engine(api, params, n_slots=3, max_seq=64)
+    for i in range(7):
+        eng.submit(Request(rid=i, prompt=[1 + i, 2, 3], max_new=5))
+    done = eng.run()
+    assert len(done) == 7
+    assert all(len(r.out) == 5 for r in done)
+
+
+def test_engine_matches_single_stream_decode():
+    """A request decoded through the batched engine produces the same
+    tokens as a dedicated single-sequence greedy decode."""
+    api, params = setup()
+    prompt = [5, 9, 2, 17]
+    # engine path (with other traffic in neighboring slots)
+    eng = Engine(api, params, n_slots=2, max_seq=64)
+    eng.submit(Request(rid=0, prompt=prompt, max_new=6))
+    eng.submit(Request(rid=1, prompt=[3, 3, 3], max_new=6))
+    done = eng.run()
+    out_engine = next(r.out for r in done if r.rid == 0)
+    # reference path
+    cache = api.init_cache(1, 64)
+    toks = list(prompt)
+    out_ref = []
+    for t in toks:
+        logits, cache = api.decode(params, cache,
+                                   jnp.asarray([t], jnp.int32))
+    for _ in range(6):
+        nxt = int(jnp.argmax(logits[0]))
+        out_ref.append(nxt)
+        logits, cache = api.decode(params, cache,
+                                   jnp.asarray([nxt], jnp.int32))
+    assert out_engine == out_ref
+
+
+def test_slot_reuse_resets_state():
+    """A slot reused by a second request must not leak the first
+    request's KV cache."""
+    api, params = setup()
+    eng = Engine(api, params, n_slots=1, max_seq=64)
+    eng.submit(Request(rid=0, prompt=[7, 8, 9], max_new=4))
+    eng.submit(Request(rid=1, prompt=[7, 8, 9], max_new=4))
+    done = eng.run()
+    assert len(done) == 2
+    assert done[0].out == done[1].out     # identical prompt -> identical out

@@ -1,0 +1,105 @@
+"""Per-assigned-architecture smoke tests (reduced configs).
+
+Required by the assignment: instantiate a REDUCED config of the same
+family and run one forward + one train step on CPU, asserting output
+shapes and the absence of NaNs.  The FULL configs are exercised only
+via the dry-run (ShapeDtypeStruct, no allocation) — asserted here via
+eval_shape parameter-count checks against the published sizes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry as cfgs
+from repro.models.registry import count_params, get_model
+from repro.train import optimizer as opt
+from repro.train.step import build_train_step
+
+ARCHS = list(cfgs.ARCH_ORDER)
+
+
+def make_batch(api, b=2, s=16):
+    cfg = api.cfg
+    rng = np.random.default_rng(1)
+    batch = dict(
+        tokens=jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+        labels=jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32))
+    if api.needs_ctx:
+        batch["ctx"] = jnp.asarray(
+            rng.standard_normal((b, cfg.n_ctx_tokens, cfg.d_model)),
+            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward(arch):
+    cfg = cfgs.get_smoke(arch)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    batch = make_batch(api)
+    logits = api.forward(params, batch)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all()), f"NaNs in {arch} logits"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = cfgs.get_smoke(arch)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    ocfg = opt.AdamWConfig(lr=1e-3)
+    ostate = opt.init_state(ocfg, params)
+    step = jax.jit(build_train_step(api, ocfg, accum=2))
+    batch = make_batch(api, b=4)
+    new_params, ostate, metrics = step(params, ostate, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # params actually moved
+    moved = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), params, new_params)
+    assert max(jax.tree_util.tree_leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = cfgs.get_smoke(arch)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    batch = make_batch(api)
+    cache = api.init_cache(2, 32)
+    if api.needs_ctx:
+        cache = api.fill_ctx(params, cache, batch["ctx"])
+    logits, cache = api.decode(params, cache, batch["tokens"][:, 0])
+    assert logits.shape == (2, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+    assert int(cache["length"][0]) == 1
+
+
+#: published parameter counts (tolerance: naming/FFN-variant slack)
+EXPECTED_PARAMS = {
+    "tinyllama-1.1b": (1.0e9, 1.3e9),
+    "minitron-8b": (7.5e9, 10.5e9),
+    "qwen2-72b": (67e9, 76e9),
+    "deepseek-7b": (6.5e9, 7.8e9),
+    # our mLSTM keeps full dh x dh per-head q/k/v (official uses a
+    # narrower qk dim); documented in DESIGN.md §param-counts
+    "xlstm-1.3b": (1.0e9, 2.1e9),
+    "llama-3.2-vision-11b": (8.5e9, 11.5e9),
+    "arctic-480b": (430e9, 500e9),
+    "grok-1-314b": (290e9, 330e9),
+    "whisper-large-v3": (1.2e9, 2.2e9),
+    "zamba2-2.7b": (2.2e9, 3.2e9),
+}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_param_count(arch):
+    """The FULL config's abstract parameter count lands in the
+    published ballpark (no allocation — eval_shape only)."""
+    cfg = cfgs.get_config(arch)
+    api = get_model(cfg)
+    struct = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    n = count_params(struct)
+    lo, hi = EXPECTED_PARAMS[arch]
+    assert lo <= n <= hi, f"{arch}: {n / 1e9:.2f}B params"

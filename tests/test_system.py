@@ -1,0 +1,80 @@
+"""End-to-end system behaviour: Mess sweeps, stage progression, views.
+
+These are the integration tests of the paper's central claims, run at
+reduced window counts (CI-speed) over the full platform stack.
+"""
+import numpy as np
+import pytest
+
+from repro.core import STAGES, get_stage, sweep
+from repro.core import reference
+
+FAST = dict(windows=32, warmup=12)
+PACES = (2, 16, 48)
+
+
+@pytest.fixture(scope="module")
+def results():
+    out = {}
+    for name in ("01-baseline", "04-model-correct", "07-prefetch"):
+        out[name] = sweep(get_stage(name, **FAST), paces=PACES,
+                          write_mixes=(0, 16))
+    return out
+
+
+def test_all_stages_defined():
+    assert len(STAGES) == 11
+    assert list(STAGES)[0] == "00-damov-native"
+
+
+def test_bandwidth_monotone_then_saturates(results):
+    for name, res in results.items():
+        bw = res.sim_bw[0]
+        assert bw[0] < bw[-1] * 1.05, name
+        assert np.all(np.diff(bw) > -0.15 * bw[:-1]), (name, bw)
+
+
+def test_views_decoupled_only_in_baseline(results):
+    base = results["01-baseline"]
+    corr = results["04-model-correct"]
+    # baseline: app latency flat (max-min < 2 ns across load)
+    assert np.ptp(base.app_lat[0]) < 2.0
+    # corrected: app latency grows with load
+    assert corr.app_lat[0][-1] > corr.app_lat[0][0] * 1.5
+
+
+def test_corrected_stage_approaches_reference():
+    """Validation the paper's way: compare the app view against the
+    measured Skylake curves.  We require qualitative agreement:
+    unloaded within a factor band and saturation bandwidth within 25%."""
+    res = sweep(get_stage("07-prefetch", **FAST), paces=(1, 32, 64),
+                write_mixes=(0,))
+    unloaded = res.app_lat[0, 0]
+    assert 0.7 * reference.UNLOADED_NS < unloaded < 1.6 * reference.UNLOADED_NS
+    sat_bw = res.app_bw[0].max()
+    ref_bw = reference.max_bandwidth_gbs(1.0)
+    assert sat_bw > 0.6 * ref_bw
+    assert sat_bw < 1.1 * ref_bw
+
+
+def test_interface_view_never_exceeds_theory_after_fix():
+    res = sweep(get_stage("03-ps-clock", **FAST), paces=(64,),
+                write_mixes=(0,))
+    peak = get_stage("03-ps-clock").platform.dram.peak_gbs
+    assert res.if_bw.max() <= peak * 1.02
+
+
+def test_baseline_interface_exceeds_theory():
+    """Fig. 2c: the broken interface reports > theoretical-max bw."""
+    res = sweep(get_stage("01-baseline", **FAST), paces=(64,),
+                write_mixes=(0,))
+    peak = get_stage("01-baseline").platform.dram.peak_gbs
+    assert res.if_bw.max() > peak
+
+
+def test_sweep_rows_roundtrip():
+    res = sweep(get_stage("01-baseline", windows=16, warmup=4),
+                paces=(2, 8), write_mixes=(0,))
+    rows = res.to_rows()
+    assert len(rows) == 2
+    assert {r["stage"] for r in rows} == {"01-baseline"}
