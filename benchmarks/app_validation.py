@@ -1,0 +1,81 @@
+"""Application-perspective validation: per-app runtime MAPE by stage.
+
+The paper's Table-style validation, built on `repro.traces`: replay the
+DAMOV-style application suite through the stage progression and report,
+per stage, each application's predicted runtime plus the MAPE against
+the real-system anchors derived from the measured Mess curves.
+
+Each stage is ONE batched compile: `jax.vmap` over the stacked
+application axis (6 apps x all windows in a single XLA program).  The
+expected narrative is the paper's: the baseline's decoupled application
+view makes latency-bound apps (pointer_chase, bfs) run far too fast;
+the interface corrections (stages 03-04) recouple them and the MAPE
+drops monotonically.
+
+CSV: ``reports/benchmarks/app_validation.csv`` with one row per
+(stage, app): runtime, anchor, error, and the three latency views.
+"""
+from __future__ import annotations
+
+import csv
+import os
+import time
+
+import numpy as np
+
+from benchmarks.util import OUT_DIR, emit
+from repro.traces import (anchor_suite_ms, make_suite, mape, replay_stages,
+                          stack_traces)
+
+STAGES = ("01-baseline", "03-ps-clock", "04-model-correct",
+          "07-prefetch", "10-delay-buffer")
+FAST = dict(windows=32, warmup=8, n=2048)
+FULL = dict(windows=96, warmup=24, n=8192)
+
+
+def main(full: bool = False):
+    knobs = FULL if full else FAST
+    names, traces = make_suite(n=knobs["n"])
+    batch = stack_traces(traces)
+    anchors = anchor_suite_ms(traces)
+
+    t0 = time.perf_counter()
+    results = replay_stages(STAGES, batch, windows=knobs["windows"],
+                            warmup=knobs["warmup"])
+    wall = time.perf_counter() - t0
+    us = wall / (len(STAGES) * len(names)) * 1e6
+
+    rows = []
+    for stage, out in results.items():
+        err = mape(out["runtime_ms"], anchors)
+        emit(f"app_validation.{stage}.mape_pct", us, f"{err:.1f}")
+        for i, nm in enumerate(names):
+            rows.append(dict(
+                stage=stage, app=nm,
+                runtime_ms=f"{out['runtime_ms'][i]:.5f}",
+                anchor_ms=f"{anchors[i]:.5f}",
+                err_pct=f"{100 * (out['runtime_ms'][i] / anchors[i] - 1):.1f}",
+                sim_lat_ns=f"{out['sim_lat_ns'][i]:.1f}",
+                if_lat_ns=f"{out['if_lat_ns'][i]:.1f}",
+                app_lat_ns=f"{out['app_lat_ns'][i]:.1f}",
+                sim_bw_gbs=f"{out['sim_bw_gbs'][i]:.1f}",
+            ))
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, "app_validation.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0]))
+        w.writeheader()
+        w.writerows(rows)
+
+    # headline: correction narrative — MAPE of first vs last stage
+    first = mape(results[STAGES[0]]["runtime_ms"], anchors)
+    last = mape(results[STAGES[-1]]["runtime_ms"], anchors)
+    emit("app_validation.baseline_vs_corrected", us,
+         f"{first:.1f} -> {last:.1f} (MAPE %, decoupling fixed)")
+    return results
+
+
+if __name__ == "__main__":
+    import sys
+    main(full="--full" in sys.argv)

@@ -18,10 +18,10 @@ def main() -> None:
                     help="comma-separated bench names (fig2,...)")
     args = ap.parse_args()
 
-    from benchmarks import (fig2_baseline, fig3_fig4_clocking,
-                            fig5_model_correct, fig6_enhancements,
-                            fig7_portability, kernels_bench,
-                            roofline_bench)
+    from benchmarks import (app_validation, fig2_baseline,
+                            fig3_fig4_clocking, fig5_model_correct,
+                            fig6_enhancements, fig7_portability,
+                            kernels_bench, roofline_bench)
     benches = {
         "fig2": fig2_baseline.main,
         "fig3_fig4": fig3_fig4_clocking.main,
@@ -30,6 +30,7 @@ def main() -> None:
         "fig7": fig7_portability.main,
         "kernels": kernels_bench.main,
         "roofline": roofline_bench.main,
+        "app_validation": app_validation.main,
     }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

@@ -1,0 +1,55 @@
+"""Replay an application trace through the simulated platform.
+
+Demonstrates the third perspective: instead of sweeping the synthetic
+Mess pace generator, drive the platform with a real access pattern and
+read out what each view claims the application experienced.
+
+    PYTHONPATH=src python examples/app_replay.py
+
+Expected output: the baseline stage predicts nearly identical runtimes
+for a streaming and a pointer-chasing kernel (the decoupling bug — the
+bound phase never sees memory latency), while the corrected stage
+separates them by the ~4x the real machine shows.
+"""
+from __future__ import annotations
+
+from repro.core import get_stage
+from repro.traces import (anchor_runtime_ms, make_suite, replay_suite,
+                          stack_traces, trace_stats)
+
+APPS = ("stream", "pointer_chase")
+
+
+def main():
+    names, traces = make_suite(n=2048, names=APPS)
+    batch = stack_traces(traces)
+
+    for nm, tr in zip(names, traces):
+        st = trace_stats(tr)
+        print(f"{nm:14s} {st['accesses']} accesses, "
+              f"{st['write_frac']:.0%} writes, {st['dep_frac']:.0%} "
+              f"dependent, {st['footprint_mb']:.0f} MB/core")
+
+    ratios = {}
+    for stage in ("01-baseline", "04-model-correct"):
+        cfg = get_stage(stage, windows=32, warmup=8)
+        out = replay_suite(cfg, batch)
+        ratios[stage] = out["runtime_ms"][1] / out["runtime_ms"][0]
+        print(f"\n== {stage} ==")
+        for i, nm in enumerate(names):
+            anchor = anchor_runtime_ms(traces[i])
+            print(f"  {nm:14s} runtime {out['runtime_ms'][i]:.3f} ms "
+                  f"(real machine ~{anchor:.3f})  "
+                  f"views sim/if/app latency = "
+                  f"{out['sim_lat_ns'][i]:.0f}/{out['if_lat_ns'][i]:.0f}/"
+                  f"{out['app_lat_ns'][i]:.0f} ns")
+    real = anchor_runtime_ms(traces[1]) / anchor_runtime_ms(traces[0])
+    print(f"\npointer_chase/stream runtime ratio: baseline "
+          f"{ratios['01-baseline']:.1f}x, corrected "
+          f"{ratios['04-model-correct']:.1f}x, real machine {real:.1f}x "
+          "— the decoupled baseline hides most of the latency-bound "
+          "slowdown")
+
+
+if __name__ == "__main__":
+    main()

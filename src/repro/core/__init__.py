@@ -3,6 +3,8 @@
 Public API:
 
 * `StageConfig`, `run_point` — the integrated ZSim-style platform.
+* `run_frontend`              — same platform under any bound-phase
+                                frontend (Mess pace or trace replay).
 * `STAGES`, `get_stage`       — the artifact's stage progression.
 * `sweep`                     — Mess bandwidth-latency characterization.
 * `make_policy`               — Ramulator/Ramulator2/DRAMsim3 flavors.
@@ -10,10 +12,11 @@ Public API:
 """
 from repro.core.backends import BACKENDS, make_policy
 from repro.core.mess import SweepResult, sweep
-from repro.core.platform import StageConfig, run_point
+from repro.core.platform import StageConfig, run_frontend, run_point
 from repro.core.stages import STAGES, STAGE_ORDER, get_stage
 
 __all__ = [
     "BACKENDS", "make_policy", "SweepResult", "sweep",
-    "StageConfig", "run_point", "STAGES", "STAGE_ORDER", "get_stage",
+    "StageConfig", "run_frontend", "run_point",
+    "STAGES", "STAGE_ORDER", "get_stage",
 ]

@@ -12,7 +12,7 @@ Per window:
    are generated against the *immediate-response* latency.  In the
    DAMOV baseline this latency is one CPU cycle; with the paper's
    correction it is the PI-controlled estimate (Sec. 3.4).
-2. **Interface** (`workload.inject` + `clocking`): requests cross the
+2. **Interface** (`workload.inject_queue` + `clocking`): requests cross the
    CPU->memory clock domain under the selected clocking model
    (broken / integer-ratio / picosecond).
 3. **Weave phase** (`dram.tick` scan): the cycle-accurate backend
@@ -87,21 +87,23 @@ class WindowOut(NamedTuple):
     l_ir: jnp.ndarray
     injected: jnp.ndarray
     ticks: jnp.ndarray
+    progress: jnp.ndarray           # frontend progress marker (traces)
 
 
 def _window_step(cfg: StageConfig, clock: ClockModel, wcfg: WorkloadConfig,
-                 pace, wr_num, carry, w):
-    queue, banks, cores, l_ir, lat_est = carry
+                 frontend, carry, w):
+    queue, banks, fstate, l_ir, lat_est = carry
     cpu = cfg.platform.cpu
     l_ir_cycles = jnp.maximum(jnp.round(l_ir).astype(jnp.int32), 1)
     window_ps = cpu.window_cycles * cpu.cpu_ps_per_clk
 
     # bound phase + interface hand-off (MSHR closed-loop budget)
     budget = workload.littles_law_budget(lat_est, window_ps)
-    cand, aux = workload.generate(cores, pace, wr_num, l_ir_cycles, wcfg,
-                                  cpu.window_cycles, budget)
-    queue, cores, injected = workload.inject(queue, cand, aux, cores,
-                                             clock, w, wcfg)
+    cand, aux = frontend.bound(fstate, l_ir_cycles, budget,
+                               cpu.window_cycles)
+    queue, acc_demand, injected = workload.inject_queue(queue, cand,
+                                                        clock, w, wcfg)
+    fstate = frontend.update(fstate, aux, acc_demand)
 
     # weave phase: cycle-accurate DRAM simulation of this window's ticks
     start = clock.window_start_tick(w)
@@ -149,21 +151,27 @@ def _window_step(cfg: StageConfig, clock: ClockModel, wcfg: WorkloadConfig,
         chase_rd=jnp.sum(st.chase_rd),
         sum_chase_lat_ticks=jnp.sum(st.sum_chase_lat_ticks),
         app_lat_cycles=app_lat_cycles, l_ir=l_ir_next,
-        injected=injected, ticks=end - start)
-    return (queue, banks, cores, l_ir_next, lat_est), out
+        injected=injected, ticks=end - start,
+        progress=frontend.progress(fstate))
+    return (queue, banks, fstate, l_ir_next, lat_est), out
 
 
-def run_point(cfg: StageConfig, pace, wr_num):
-    """Simulate one Mess operating point; returns the three views.
+def run_frontend(cfg: StageConfig, frontend):
+    """Simulate the platform driven by any bound-phase frontend.
 
-    pace:   requests / traffic core / window (int32, traced — vmap-able)
-    wr_num: write-fraction numerator out of 64 (int32, traced)
+    ``frontend`` follows the protocol documented on
+    `workload.MessFrontend`; it may close over traced arrays, so this
+    function is `vmap`-able across operating points (Mess) or
+    applications (trace replay).  Returns ``(views, outs)`` — the
+    aggregated three-view dict of scalars plus the raw per-window
+    `WindowOut` trajectory (used by the replay engine to locate the
+    trace-completion window).
     """
     clock = cfg.clock()
     wcfg = cfg.workload_config()
     queue = dram.init_queue(cfg.platform.dram, cfg.policy)
     banks = dram.init_banks(cfg.platform.dram)
-    cores = workload.init_cores()
+    fstate = frontend.init_state()
     l_ir0 = jnp.asarray(cfg.l_ir_init_cycles, jnp.float32)
     # optimistic unloaded estimate; the EMA converges within warmup
     lat_est0 = jnp.asarray(
@@ -172,10 +180,24 @@ def run_point(cfg: StageConfig, pace, wr_num):
         + (cfg.platform.dram.tCL + cfg.platform.dram.tBL)
         * cfg.platform.dram.dram_ps_per_clk, jnp.float32)
 
-    step = functools.partial(_window_step, cfg, clock, wcfg, pace, wr_num)
-    _, outs = jax.lax.scan(step, (queue, banks, cores, l_ir0, lat_est0),
+    step = functools.partial(_window_step, cfg, clock, wcfg, frontend)
+    _, outs = jax.lax.scan(step, (queue, banks, fstate, l_ir0, lat_est0),
                            jnp.arange(cfg.windows, dtype=jnp.int32))
+    return _aggregate(cfg, outs), outs
 
+
+def run_point(cfg: StageConfig, pace, wr_num):
+    """Simulate one Mess operating point; returns the three views.
+
+    pace:   requests / traffic core / window (int32, traced — vmap-able)
+    wr_num: write-fraction numerator out of 64 (int32, traced)
+    """
+    frontend = workload.MessFrontend(pace, wr_num, cfg.workload_config())
+    views, _ = run_frontend(cfg, frontend)
+    return views
+
+
+def _aggregate(cfg: StageConfig, outs: WindowOut):
     # aggregate post-warmup
     keep = jnp.arange(cfg.windows) >= cfg.warmup
     def ksum(x):

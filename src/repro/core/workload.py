@@ -122,6 +122,32 @@ class Candidates(NamedTuple):
     is_pf: jnp.ndarray         # speculative prefetch (not demand)
 
 
+def chase_probe(seq, carry, l_ir_cycles, cfg: WorkloadConfig,
+                window_cycles):
+    """Pointer-chase latency probe: one window of serialized loads.
+
+    One outstanding load at a time; in the bound phase the next load
+    issues after cache-path + immediate-response cycles (the ZSim
+    two-phase semantics the paper corrects).  Shared by every frontend —
+    the probe is the platform's latency instrument, independent of the
+    workload driving the traffic cores.
+
+    Returns ``(valid, line, issue, iters, new_carry, iter_cycles)``
+    where the first three are (CAND,) per-slot arrays.
+    """
+    j = jnp.arange(CAND, dtype=jnp.int32)
+    noc_rt = cfg.noc_req_cycles + cfg.noc_resp_cycles
+    iter_cycles = jnp.maximum(
+        cfg.cache_path_cycles + noc_rt + l_ir_cycles, 1)
+    budget = window_cycles + carry
+    iters = jnp.minimum(CAND, budget // iter_cycles)
+    new_carry = budget - iters * iter_cycles
+    valid = j < iters
+    line = _chase_line(seq + j)
+    issue = j * iter_cycles
+    return valid, line, issue, iters, new_carry, iter_cycles
+
+
 def generate(cores: CoreState, pace, wr_num, l_ir_cycles,
              cfg: WorkloadConfig, window_cycles: int = 1000,
              budget=CAP_DEMAND):
@@ -131,7 +157,9 @@ def generate(cores: CoreState, pace, wr_num, l_ir_cycles,
     wr_num:  int32 — write fraction numerator (den=64).
     l_ir_cycles: int32 — current immediate-response latency.
     budget:  int32 — MSHR closed-loop cap (`littles_law_budget`).
-    Returns (Candidates, new CoreState aux, chase_iters, iter_cycles).
+    Returns ``(Candidates, aux)``; the aux dict carries the quota /
+    backlog / chase bookkeeping that `MessFrontend.update` folds into
+    the next window's `CoreState`.
     """
     cid = jnp.arange(N_CORES, dtype=jnp.int32)[:, None]       # (24,1)
     j = jnp.arange(CAND, dtype=jnp.int32)[None, :]            # (1,CAND)
@@ -163,18 +191,10 @@ def generate(cores: CoreState, pace, wr_num, l_ir_cycles,
             pf_valid, jp * window_cycles // jnp.maximum(pf_quota, 1), t_issue)
 
     # ---- pointer chase (the latency probe) ------------------------------
-    # One outstanding load at a time; in the bound phase the next load
-    # issues after cache-path + immediate-response cycles (the ZSim
-    # two-phase semantics the paper corrects).
-    noc_rt = cfg.noc_req_cycles + cfg.noc_resp_cycles
-    iter_cycles = jnp.maximum(
-        cfg.cache_path_cycles + noc_rt + l_ir_cycles, 1)
-    budget = window_cycles + cores.chase_carry
-    chase_iters = jnp.minimum(CAND, budget // iter_cycles)
-    chase_carry = budget - chase_iters * iter_cycles
-    c_valid = (cid == CHASE_CORE) & (j < chase_iters)
-    c_line = _chase_line(cores.seq[CHASE_CORE] + j)
-    c_issue = j * iter_cycles
+    cv, c_line, c_issue, chase_iters, chase_carry, iter_cycles = chase_probe(
+        cores.seq[CHASE_CORE], cores.chase_carry, l_ir_cycles, cfg,
+        window_cycles)
+    c_valid = (cid == CHASE_CORE) & cv[None, :]
 
     cand = Candidates(
         valid=(t_valid & is_traffic) | c_valid,
@@ -189,12 +209,18 @@ def generate(cores: CoreState, pace, wr_num, l_ir_cycles,
     return cand, aux
 
 
-def inject(queue: QueueState, cand: Candidates, aux, cores: CoreState,
-           clock, w, cfg: WorkloadConfig):
+def inject_queue(queue: QueueState, cand: Candidates, clock, w,
+                 cfg: WorkloadConfig):
     """Scatter candidates into per-channel queue slots (bounded admit).
 
-    Admission is chase-first then issue-order round-robin; rejected
-    demand goes to the per-core backlog.  Returns (queue', CoreState').
+    Admission is chase-first then issue-order round-robin.  This is the
+    frontend-agnostic half of the CPU->memory interface: any bound-phase
+    workload (Mess pace generator, trace replay, ...) produces
+    `Candidates` and hands them off here.
+
+    Returns ``(queue', acc_demand, n_accepted)`` where ``acc_demand`` is
+    the (24,) per-core count of accepted demand (non-prefetch) requests
+    — the frontend uses it to advance its own state.
     """
     C, Q = queue.valid.shape
     n = N_CORES * CAND
@@ -246,12 +272,51 @@ def inject(queue: QueueState, cand: Candidates, aux, cores: CoreState,
 
     acc_demand = jnp.zeros(N_CORES, jnp.int32).at[core_of[order]].add(
         (accepted & ~flat.is_pf[order]).astype(jnp.int32))
-    demanded = jnp.where(jnp.arange(N_CORES) < N_TRAFFIC, aux["want"], 0)
-    backlog = jnp.clip(demanded - jnp.minimum(acc_demand, demanded),
-                       0, BACKLOG_MAX)
-    seq = cores.seq + jnp.where(
-        jnp.arange(N_CORES) < N_TRAFFIC, aux["quota"],
-        aux["chase_iters"]).astype(jnp.int32)
-    cores = CoreState(seq=seq, backlog=backlog,
-                      chase_carry=aux["chase_carry"])
-    return queue, cores, jnp.sum(accepted.astype(jnp.int32))
+    return queue, acc_demand, jnp.sum(accepted.astype(jnp.int32))
+
+
+class MessFrontend:
+    """The Mess pace generator as a pluggable bound-phase frontend.
+
+    A *frontend* is the bound-phase half of the platform: it owns a
+    per-window state pytree and emits `Candidates` that `inject_queue`
+    hands to the memory system.  The protocol (duck-typed; see also
+    `repro.traces.frontend.TraceFrontend`):
+
+    * ``init_state()``                    -> state pytree (scan carry)
+    * ``bound(state, l_ir_cycles, budget, window_cycles)``
+                                          -> (Candidates, aux)
+    * ``update(state, aux, acc_demand)``  -> state'  (post-injection)
+    * ``progress(state)``                 -> () int32 monotone progress
+                                             marker (0 if not meaningful)
+
+    Frontends may close over traced values (`pace` here, trace arrays in
+    the replay frontend), so one compiled `run_frontend` program can be
+    `vmap`-ed across operating points or applications.
+    """
+
+    def __init__(self, pace, wr_num, cfg: WorkloadConfig):
+        self.pace = pace
+        self.wr_num = wr_num
+        self.cfg = cfg
+
+    def init_state(self) -> CoreState:
+        return init_cores()
+
+    def bound(self, state: CoreState, l_ir_cycles, budget, window_cycles):
+        return generate(state, self.pace, self.wr_num, l_ir_cycles,
+                        self.cfg, window_cycles, budget)
+
+    def update(self, state: CoreState, aux, acc_demand) -> CoreState:
+        demanded = jnp.where(jnp.arange(N_CORES) < N_TRAFFIC,
+                             aux["want"], 0)
+        backlog = jnp.clip(demanded - jnp.minimum(acc_demand, demanded),
+                           0, BACKLOG_MAX)
+        seq = state.seq + jnp.where(
+            jnp.arange(N_CORES) < N_TRAFFIC, aux["quota"],
+            aux["chase_iters"]).astype(jnp.int32)
+        return CoreState(seq=seq, backlog=backlog,
+                         chase_carry=aux["chase_carry"])
+
+    def progress(self, state: CoreState):
+        return jnp.zeros((), jnp.int32)

@@ -115,12 +115,16 @@ def _dot_flops(line: str, types: dict) -> float:
     out_elems = 1
     for d in out_dims:
         out_elems *= d
-    # contraction size from lhs operand
-    ops_m = re.search(r"dot\(%?([\w.\-]+),\s*%?([\w.\-]+)\)", line)
+    # contraction size from the lhs operand; newer XLA prints operand
+    # types inline — "dot(f32[..]{..} %lhs, ...)" — older prints bare
+    # "%lhs".  Accept both, preferring the inline type.
+    ops_m = re.search(
+        r"dot\(\s*(?:(\w+\[[\d,]*\])(?:\{[^}]*\})?\s+)?%?([\w.\-]+),",
+        line)
     cd_m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
     if not ops_m or not cd_m:
         return 2.0 * out_elems        # fallback
-    lhs_t = types.get(ops_m.group(1), "")
+    lhs_t = ops_m.group(1) or types.get(ops_m.group(2), "")
     _, lhs_dims = _shape_dims(lhs_t)
     contract = 1
     for i in cd_m.group(1).split(","):

@@ -1,0 +1,69 @@
+"""Reference runtime anchors: what each application *should* take.
+
+The paper validates simulators against the measured machine; for the
+application perspective that means per-application runtime on the real
+Skylake server.  We derive analytic anchors from the measured Mess
+curves in `repro.core.reference` with a small closed-system model:
+
+* dependent accesses serialize at the measured load-to-use latency
+  (a pointer chase runs at exactly one access per latency);
+* independent accesses stream at the Little's-law rate of `MSHR_CAP`
+  outstanding lines per core, capped by the machine's per-mix maximum
+  bandwidth share;
+* latency and bandwidth are solved as a fixed point (more traffic ->
+  higher latency -> fewer outstanding-lines per second).
+
+These anchors are *references*, not measurements — they inherit the
+anchor points the paper reports (89 ns unloaded, 120 GB/s saturation)
+and serve as the ground truth for the benchmark's MAPE, playing the
+role of the paper's real-hardware column.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import reference
+from repro.core.workload import MSHR_CAP, N_TRAFFIC
+from repro.traces.trace import Trace, trace_stats
+
+LINE_BYTES = 64
+
+
+def anchor_runtime_ms(trace: Trace, iters: int = 8) -> float:
+    """Analytic real-system runtime of one (unbatched) trace, in ms.
+
+    The trace is sharded across `N_TRAFFIC` cores exactly as the replay
+    frontend does, so anchor and prediction describe the same execution.
+    """
+    st = trace_stats(trace)
+    n = st["accesses"]
+    if n == 0:
+        return 0.0
+    read_frac = 1.0 - st["write_frac"]
+    n_dep = st["dep_frac"] * n
+    n_ind = n - n_dep
+
+    bw = 1.0                                   # GB/s, fixed-point seed
+    t_ns = 1.0
+    for _ in range(iters):
+        lat = float(reference.latency_ns(bw, read_frac))
+        # per-core independent service rate (lines/ns), Little's law
+        rate_core = MSHR_CAP / lat
+        bw_cap = reference.max_bandwidth_gbs(read_frac)
+        rate_cap = bw_cap / (N_TRAFFIC * LINE_BYTES)   # GB/s -> lines/ns/core
+        rate = min(rate_core, rate_cap)
+        # every core replays the full stream against its own shard
+        t_ns = n_dep * lat + n_ind / rate
+        bw = N_TRAFFIC * n * LINE_BYTES / t_ns         # bytes/ns = GB/s
+    return t_ns * 1e-6
+
+
+def anchor_suite_ms(traces: list[Trace]) -> np.ndarray:
+    return np.asarray([anchor_runtime_ms(t) for t in traces])
+
+
+def mape(predicted_ms, anchor_ms) -> float:
+    """Mean absolute percentage error of predicted vs anchor runtimes."""
+    p = np.asarray(predicted_ms, np.float64)
+    a = np.asarray(anchor_ms, np.float64)
+    return float(np.mean(np.abs(p - a) / np.maximum(a, 1e-12)) * 100.0)

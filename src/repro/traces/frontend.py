@@ -1,0 +1,157 @@
+"""Trace-replay bound-phase frontend (the application perspective).
+
+`TraceFrontend` plugs into `platform.run_frontend` exactly where the
+Mess pace generator does (`workload.MessFrontend`), so replayed
+applications run under the *same* bound/weave windows, immediate-
+response latency, PI controller, and MSHR closed loop — the decoupling
+bug and its corrections apply to real access patterns, not just
+synthetic sweeps.
+
+Replay model (all fixed-shape, `vmap`-safe):
+
+* The trace is sharded data-parallel across the 23 traffic cores: every
+  core replays the same delta stream against its own base region
+  (``core * footprint``), i.e. a multi-threaded kernel with per-core
+  shards.  One shared cursor tracks progress.
+* Per window the frontend slices the next `CAP_DEMAND` accesses
+  (`dynamic_slice` at the cursor) and prices each in CPU cycles:
+  an *independent* access costs the MSHR-closed-loop issue interval
+  (``window_cycles / budget`` — Little's-law pacing, identical to the
+  Mess generator's throttle), a *dependent* access costs the full
+  bound-phase load-to-use latency (cache path + NOC + immediate
+  response) because it cannot issue before the previous response.
+  The consumed prefix is the accesses whose cumulative cost fits the
+  window (+ carry-over), which is precisely how far the application
+  advances this window.
+* The pointer-chase probe core keeps running (`workload.chase_probe`):
+  it is the platform's latency instrument, shared by every frontend.
+
+Abstraction (documented, Mess-style): demand rejected by a full channel
+queue is not replayed — with 256-deep queues this is rare, and dropping
+preserves pressure statistically (same policy as the pace generator).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from typing import NamedTuple
+
+from repro.core import workload
+from repro.core.workload import (CAND, CAP_DEMAND, CHASE_CORE, N_CORES,
+                                 N_TRAFFIC, Candidates, WorkloadConfig)
+from repro.traces.trace import Trace
+
+
+class TraceState(NamedTuple):
+    pos: jnp.ndarray          # () int32 shared cursor into the trace
+    line_cum: jnp.ndarray     # () int32 running delta sum at the cursor
+    carry: jnp.ndarray        # () int32 leftover CPU cycles
+    chase_seq: jnp.ndarray    # () int32 probe stream position
+    chase_carry: jnp.ndarray  # () int32 probe loop carry
+
+
+class TraceFrontend:
+    """Replay one application trace through the bound phase.
+
+    Closes over the (possibly traced/batched) `Trace` arrays, so
+    ``run_frontend(cfg, TraceFrontend(trace, wcfg))`` vmaps across a
+    stacked application axis with a single compiled program.
+    """
+
+    def __init__(self, trace: Trace, cfg: WorkloadConfig):
+        self.trace = trace
+        self.cfg = cfg
+
+    def init_state(self) -> TraceState:
+        z = jnp.zeros((), jnp.int32)
+        return TraceState(pos=z, line_cum=z, carry=z,
+                          chase_seq=z, chase_carry=z)
+
+    def bound(self, state: TraceState, l_ir_cycles, budget, window_cycles):
+        tr = self.trace
+        cid = jnp.arange(N_CORES, dtype=jnp.int32)[:, None]     # (24,1)
+        j = jnp.arange(CAND, dtype=jnp.int32)[None, :]          # (1,CAND)
+        jj = jnp.arange(CAP_DEMAND, dtype=jnp.int32)            # (CAP,)
+        is_traffic = cid < N_TRAFFIC
+
+        # ---- next CAP_DEMAND accesses at the cursor --------------------
+        pos = jnp.minimum(state.pos, tr.length)
+        sl = lambda a: jax.lax.dynamic_slice(a, (pos,), (CAP_DEMAND,))
+        delta = sl(tr.delta)
+        is_wr = sl(tr.is_write)
+        dep = sl(tr.dep)
+        in_range = pos + jj < tr.length
+
+        # ---- the shared latency probe ----------------------------------
+        cv, c_line, c_issue, chase_iters, chase_carry, iter_cycles = \
+            workload.chase_probe(state.chase_seq, state.chase_carry,
+                                 l_ir_cycles, self.cfg, window_cycles)
+        c_valid = (cid == CHASE_CORE) & cv[None, :]
+
+        # ---- cycle pricing under the MSHR closed loop ------------------
+        # a dep-marked access is priced exactly like one probe iteration
+        # (bound-phase load-to-use); independents at the Little's-law
+        # issue interval
+        dep_cycles = iter_cycles
+        ind_cycles = jnp.maximum(window_cycles // jnp.maximum(budget, 1), 1)
+        cost = jnp.where(dep == 1, dep_cycles, ind_cycles)
+        fin = jnp.cumsum(cost)                       # finish cycle of k-th
+        start_c = fin - cost
+        avail = window_cycles + state.carry
+        take = in_range & (fin <= avail)             # prefix by monotone fin
+        n_take = jnp.sum(take.astype(jnp.int32))
+        used = jnp.sum(jnp.where(take, cost, 0))
+        # carry at most one window of slack; none once the trace is done
+        new_carry = jnp.clip(jnp.where(jnp.any(in_range), avail - used, 0),
+                             0, window_cycles)
+
+        # ---- absolute lines: per-core shard base + wrapped delta sum ---
+        # Each core gets a hashed *phase* within its shard: real
+        # data-parallel threads do not run in address lockstep, and
+        # without the stagger all 23 cores hit the same channel/bank
+        # residues simultaneously (serializing 6 channels down to ~3).
+        cum = state.line_cum + jnp.cumsum(delta)                # (CAP,)
+        phase = (cid.astype(jnp.uint32) * jnp.uint32(2654435761)
+                 % tr.footprint_lines.astype(jnp.uint32)
+                 ).astype(jnp.int32)                            # (24,1)
+        idx = jnp.remainder(cum[None, :] + phase,
+                            tr.footprint_lines)                 # (24,CAP)
+        base = (cid * tr.footprint_lines).astype(jnp.uint32)    # (24,1)
+        t_line = base + idx.astype(jnp.uint32)
+        t_valid = is_traffic & take[None, :]
+        t_issue = jnp.minimum(start_c, window_cycles - 1)
+
+        # pad the demand slice up to CAND slots (no prefetch slots used)
+        padc = CAND - CAP_DEMAND
+        pad2 = lambda a, v: jnp.pad(a, ((0, 0), (0, padc)),
+                                    constant_values=v)
+        pad_t = lambda a, v: jnp.pad(a, (0, padc), constant_values=v)
+
+        cand = Candidates(
+            valid=pad2(t_valid, False) | c_valid,
+            line=jnp.where(is_traffic, pad2(t_line, 0), c_line),
+            is_write=jnp.where(is_traffic,
+                               pad_t(is_wr, 0)[None, :] == 1, False),
+            issue_cycle=jnp.where(is_traffic, pad_t(t_issue, 0)[None, :],
+                                  c_issue).astype(jnp.int32),
+            is_chase=c_valid,
+            is_pf=jnp.zeros((N_CORES, CAND), bool),
+        )
+        aux = dict(n_take=n_take, new_carry=new_carry,
+                   line_cum_next=state.line_cum
+                   + jnp.sum(jnp.where(take, delta, 0)),
+                   chase_iters=chase_iters, chase_carry=chase_carry)
+        return cand, aux
+
+    def update(self, state: TraceState, aux, acc_demand) -> TraceState:
+        del acc_demand   # rejected demand is dropped (see module doc)
+        return TraceState(
+            pos=state.pos + aux["n_take"],
+            line_cum=aux["line_cum_next"],
+            carry=aux["new_carry"],
+            chase_seq=state.chase_seq + aux["chase_iters"],
+            chase_carry=aux["chase_carry"],
+        )
+
+    def progress(self, state: TraceState):
+        return state.pos

@@ -1,0 +1,107 @@
+"""Compact JAX-native application-trace representation.
+
+The third perspective of the paper — the *application* — needs real
+access patterns, not just the Mess pace generator.  A `Trace` is a
+fixed-shape, batchable encoding of one application's memory behaviour:
+
+* ``delta``  — per-access cache-line *delta* from the previous access.
+  Deltas (not absolute addresses) keep the encoding compact, let one
+  trace be sharded across the 23 traffic cores by adding per-core base
+  offsets, and make footprint wrapping a single modulo.
+* ``is_write`` — read/write flag per access.
+* ``dep``    — dependency marker: a 1 means the access needs the
+  *previous* access's response before it can issue (a pointer-chase /
+  linked-traversal edge).  This is what lets latency-bound semantics
+  survive ``vmap``: the replay frontend turns dep-runs into serialized
+  issue at the bound-phase load-to-use latency instead of trying to
+  track per-access completion events (which would be data-dependent
+  control flow).
+
+All fields are (L,) arrays plus two per-trace scalars, so a suite of
+applications stacks to a leading batch axis and replays under one
+``jax.vmap``-ed compile.  Arrays are padded by at least one bound-phase
+slice beyond ``length`` so windowed `dynamic_slice` reads never clamp
+into valid data.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.workload import CAP_DEMAND
+
+#: traffic-core trace regions must stay below the chase-probe region
+#: (bit 31) — 24 cores x footprint must fit in 2^31 lines.
+MAX_FOOTPRINT_LINES = 1 << 26
+
+
+class Trace(NamedTuple):
+    """One application's access trace (or a batch, with a leading axis)."""
+
+    delta: jnp.ndarray            # (L,) int32 line delta vs previous
+    is_write: jnp.ndarray         # (L,) int32 0/1
+    dep: jnp.ndarray              # (L,) int32 0/1 depends-on-previous
+    length: jnp.ndarray           # ()  int32 valid prefix
+    footprint_lines: jnp.ndarray  # ()  int32 per-core footprint (mod wrap)
+
+    @property
+    def n_slots(self) -> int:
+        return self.delta.shape[-1]
+
+
+def make_trace(delta, is_write, dep, footprint_lines: int) -> Trace:
+    """Build a `Trace` from host arrays, padding for windowed slicing."""
+    delta = np.asarray(delta, np.int32)
+    is_write = np.asarray(is_write, np.int32)
+    dep = np.asarray(dep, np.int32)
+    if not (delta.shape == is_write.shape == dep.shape) or delta.ndim != 1:
+        raise ValueError("delta/is_write/dep must be equal-length 1-D")
+    if not 0 < footprint_lines <= MAX_FOOTPRINT_LINES:
+        raise ValueError(
+            f"footprint_lines must be in (0, {MAX_FOOTPRINT_LINES}]")
+    n = delta.shape[0]
+    pad = CAP_DEMAND
+    z = lambda a: np.pad(a, (0, pad))
+    return Trace(
+        delta=jnp.asarray(z(delta)),
+        is_write=jnp.asarray(z(is_write)),
+        dep=jnp.asarray(z(dep)),
+        length=jnp.asarray(n, jnp.int32),
+        footprint_lines=jnp.asarray(footprint_lines, jnp.int32),
+    )
+
+
+def stack_traces(traces: list[Trace]) -> Trace:
+    """Stack per-app traces to a batch, right-padding to a common L.
+
+    The result replays under ``jax.vmap`` as one compiled program over
+    the application axis; per-app ``length`` keeps short traces honest.
+    """
+    L = max(t.n_slots for t in traces)
+
+    def padded(t: Trace):
+        pad = L - t.n_slots
+        return t._replace(
+            delta=jnp.pad(t.delta, (0, pad)),
+            is_write=jnp.pad(t.is_write, (0, pad)),
+            dep=jnp.pad(t.dep, (0, pad)),
+        )
+
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *[padded(t) for t in traces])
+
+
+def trace_stats(trace: Trace) -> dict:
+    """Host-side summary of one (unbatched) trace."""
+    n = int(trace.length)
+    wr = np.asarray(trace.is_write)[:n]
+    dep = np.asarray(trace.dep)[:n]
+    return dict(
+        accesses=n,
+        write_frac=float(wr.mean()) if n else 0.0,
+        dep_frac=float(dep.mean()) if n else 0.0,
+        footprint_mb=float(trace.footprint_lines) * 64 / 2**20,
+    )

@@ -1,0 +1,56 @@
+"""Coverage for `backends.make_policy` and `stages.get_stage`."""
+import dataclasses
+
+import pytest
+
+from repro.core import STAGES, get_stage, make_policy
+from repro.core.backends import BACKENDS, MC_PHY_TICKS
+
+
+def test_make_policy_known_backends():
+    for name in ("ramulator", "ramulator2", "dramsim3"):
+        pol = make_policy(name)
+        assert pol is BACKENDS[name]
+        assert pol.name == name
+        assert pol.mc_extra_ticks == 0
+
+
+def test_make_policy_unknown_backend_raises():
+    with pytest.raises(ValueError, match="unknown backend"):
+        make_policy("gem5")
+    # the error names the available flavors
+    with pytest.raises(ValueError, match="ramulator2"):
+        make_policy("nope")
+
+
+def test_make_policy_delay_buffer_adds_phy_ticks():
+    for name in BACKENDS:
+        pol = make_policy(name, delay_buffer=True)
+        assert pol.mc_extra_ticks == MC_PHY_TICKS
+        # everything else is untouched
+        assert dataclasses.replace(pol, mc_extra_ticks=0) == BACKENDS[name]
+
+
+def test_get_stage_returns_registered_config():
+    cfg = get_stage("04-model-correct")
+    assert cfg is STAGES["04-model-correct"]
+    assert cfg.pi_latency
+
+
+def test_get_stage_override_does_not_mutate_registry():
+    cfg = get_stage("01-baseline", windows=7, warmup=2)
+    assert (cfg.windows, cfg.warmup) == (7, 2)
+    assert STAGES["01-baseline"].windows != 7
+    assert cfg.name == "01-baseline"
+
+
+def test_get_stage_unknown_raises_with_catalog():
+    with pytest.raises(ValueError, match="unknown stage"):
+        get_stage("99-nope")
+    with pytest.raises(ValueError, match="01-baseline"):
+        get_stage("99-nope")
+
+
+def test_get_stage_bad_override_field_raises():
+    with pytest.raises(TypeError):
+        get_stage("01-baseline", not_a_field=1)

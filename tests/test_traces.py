@@ -1,0 +1,154 @@
+"""Trace subsystem: representation, kernels, replay, frontend parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import get_stage, run_point
+from repro.core.workload import CAP_DEMAND
+from repro.traces import (KERNELS, Trace, anchor_suite_ms, make_suite,
+                          make_trace, replay_suite, stack_traces,
+                          trace_stats)
+from repro.traces.kernels import mess_traffic
+
+FAST = dict(windows=24, warmup=8)
+
+
+# ---------------------------------------------------------------- traces
+
+def test_kernel_generators_emit_valid_traces():
+    names, traces = make_suite(n=1024)
+    assert set(names) == set(KERNELS)
+    for nm, t in zip(names, traces):
+        st = trace_stats(t)
+        assert st["accesses"] == 1024, nm
+        # padded for windowed dynamic_slice
+        assert t.n_slots >= 1024 + CAP_DEMAND, nm
+        # deltas reconstruct to lines inside the footprint
+        lines = np.cumsum(np.asarray(t.delta)[:1024]) % int(
+            t.footprint_lines)
+        assert (lines >= 0).all() and (lines < int(t.footprint_lines)).all()
+
+
+def test_kernel_character():
+    """Each kernel carries its DAMOV-class signature."""
+    _, (stream_t, gups_t, _, _, chase_t, bfs_t) = make_suite(n=1024)
+    assert trace_stats(stream_t)["write_frac"] == pytest.approx(1 / 3,
+                                                                abs=0.02)
+    assert trace_stats(gups_t)["write_frac"] == pytest.approx(0.5, abs=0.01)
+    assert trace_stats(chase_t)["dep_frac"] > 0.99
+    assert 0.1 < trace_stats(bfs_t)["dep_frac"] < 0.3
+    assert trace_stats(stream_t)["dep_frac"] == 0.0
+
+
+def test_make_trace_validates():
+    with pytest.raises(ValueError):
+        make_trace([1, 2], [0], [0], 1024)        # length mismatch
+    with pytest.raises(ValueError):
+        make_trace([1], [0], [0], 0)              # bad footprint
+
+
+def test_stack_traces_pads_to_common_length():
+    a = make_trace(np.ones(100), np.zeros(100), np.zeros(100), 1 << 16)
+    b = make_trace(np.ones(500), np.zeros(500), np.zeros(500), 1 << 16)
+    batch = stack_traces([a, b])
+    assert batch.delta.shape[0] == 2
+    assert batch.delta.shape[1] == b.n_slots
+    assert list(np.asarray(batch.length)) == [100, 500]
+
+
+# ---------------------------------------------------------------- replay
+
+@pytest.fixture(scope="module")
+def suite_result():
+    names, traces = make_suite(n=1024)
+    cfg = get_stage("04-model-correct", **FAST)
+    return names, traces, replay_suite(cfg, stack_traces(traces))
+
+
+def test_batched_replay_all_apps(suite_result):
+    names, _, out = suite_result
+    assert out["sim_bw_gbs"].shape == (len(names),)
+    assert (out["n_rd"] > 0).all()
+    assert (out["runtime_ms"] > 0).all()
+    assert np.isfinite(out["runtime_ms"]).all()
+
+
+def test_latency_bound_app_is_slowest(suite_result):
+    names, _, out = suite_result
+    rt = dict(zip(names, out["runtime_ms"]))
+    assert rt["pointer_chase"] > 2 * rt["stream"]
+    # and it barely uses bandwidth
+    bw = dict(zip(names, out["sim_bw_gbs"]))
+    assert bw["pointer_chase"] < 0.5 * bw["stream"]
+
+
+def test_short_trace_finishes_and_runtime_counts_windows():
+    tiny = make_trace(np.ones(64), np.zeros(64), np.zeros(64), 1 << 16)
+    cfg = get_stage("03-ps-clock", windows=16, warmup=4)
+    out = replay_suite(cfg, stack_traces([tiny]))
+    assert bool(out["done"][0])
+    assert out["runtime_windows"][0] <= 4
+
+
+def test_anchor_runtimes_are_ordered():
+    names, traces = make_suite(n=1024)
+    anch = dict(zip(names, anchor_suite_ms(traces)))
+    # real machine: latency-bound >> bandwidth-bound
+    assert anch["pointer_chase"] > 3 * anch["stream"]
+    assert all(a > 0 for a in anch.values())
+
+
+def test_baseline_decoupling_hides_latency_bound_slowdown():
+    """The paper's claim on real access patterns: the uncorrected app
+    view replays a pointer chase far too fast; stage 04 recouples it."""
+    _, traces = make_suite(n=1024, names=("stream", "pointer_chase"))
+    batch = stack_traces(traces)
+    base = replay_suite(get_stage("01-baseline", **FAST), batch)
+    corr = replay_suite(get_stage("04-model-correct", **FAST), batch)
+    ratio_base = base["runtime_ms"][1] / base["runtime_ms"][0]
+    ratio_corr = corr["runtime_ms"][1] / corr["runtime_ms"][0]
+    assert ratio_corr > 1.3 * ratio_base
+
+
+# ------------------------------------------------- frontend cross-check
+
+def test_trace_frontend_matches_mess_frontend():
+    """Acceptance: identical traffic through both frontends -> the
+    views agree within tolerance.
+
+    `mess_traffic` emits the pace generator's own pattern (64-line
+    sequential segments at scattered bases) as a trace; replayed at
+    saturation it must reproduce the Mess sweep point (pace=64) the
+    native frontend produces, in all three views.
+    """
+    cfg = get_stage("04-model-correct", windows=32, warmup=8)
+    mess = jax.jit(lambda p, w: run_point(cfg, p, w))(
+        jnp.int32(64), jnp.int32(0))
+    mess = {k: float(v) for k, v in mess.items()}
+
+    trace = mess_traffic(n=60000, write_num=0)
+    out = replay_suite(cfg, stack_traces([trace]))
+
+    assert out["sim_bw_gbs"][0] == pytest.approx(
+        mess["sim_bw_gbs"], rel=0.15)
+    assert out["sim_lat_ns"][0] == pytest.approx(
+        mess["sim_lat_ns"], rel=0.25)
+    assert out["if_bw_gbs"][0] == pytest.approx(mess["if_bw_gbs"], rel=0.15)
+    assert out["if_lat_ns"][0] == pytest.approx(mess["if_lat_ns"], rel=0.25)
+    assert out["app_lat_ns"][0] == pytest.approx(
+        mess["app_lat_ns"], rel=0.25)
+
+
+def test_trace_frontend_write_mix_matches_mess():
+    cfg = get_stage("03-ps-clock", windows=24, warmup=8)
+    mess = jax.jit(lambda p, w: run_point(cfg, p, w))(
+        jnp.int32(64), jnp.int32(21))
+    trace = mess_traffic(n=60000, write_num=21)
+    out = replay_suite(cfg, stack_traces([trace]))
+    # write fraction carried through to the served mix
+    mess_wr = float(mess["n_wr"]) / float(mess["n_rd"] + mess["n_wr"])
+    tr_wr = out["n_wr"][0] / (out["n_rd"][0] + out["n_wr"][0])
+    assert tr_wr == pytest.approx(mess_wr, abs=0.05)
+    assert out["sim_bw_gbs"][0] == pytest.approx(
+        float(mess["sim_bw_gbs"]), rel=0.2)
