@@ -3,17 +3,23 @@
 The paper's Table-style validation, built on `repro.traces`: replay the
 DAMOV-style application suite through the stage progression and report,
 per stage, each application's predicted runtime plus the MAPE against
-the real-system anchors derived from the measured Mess curves.
+the real-system anchors derived from the measured Mess curves — per
+memory-device preset (DDR4-2666 / DDR5-4800 / HBM2e).
 
-Each stage is ONE batched compile: `jax.vmap` over the stacked
-application axis (6 apps x all windows in a single XLA program).  The
+Each (preset, stage) cell is ONE compiled program whose application
+axis is sharded across all devices (`repro.core.shard`): 6 apps x all
+windows in a single XLA program, vmap fallback on one device.  The
 expected narrative is the paper's: the baseline's decoupled application
 view makes latency-bound apps (pointer_chase, bfs) run far too fast;
 the interface corrections (stages 03-04) recouple them and the MAPE
-drops monotonically.
+drops monotonically — on every device generation, against that
+generation's own anchors.
 
-CSV: ``reports/benchmarks/app_validation.csv`` with one row per
-(stage, app): runtime, anchor, error, and the three latency views.
+CSV: ``reports/benchmarks/app_validation[_<preset>].csv`` with one row
+per (stage, app): runtime, anchor, error, and the three latency views.
+
+Usage:
+    python -m benchmarks.app_validation [--full] [--preset P] [--grid]
 """
 from __future__ import annotations
 
@@ -21,9 +27,8 @@ import csv
 import os
 import time
 
-import numpy as np
-
-from benchmarks.util import OUT_DIR, emit
+from benchmarks.util import OUT_DIR, emit, preset_suffix
+from repro.core.presets import PRESET_ORDER
 from repro.traces import (anchor_suite_ms, make_suite, mape, replay_stages,
                           stack_traces)
 
@@ -33,25 +38,38 @@ FAST = dict(windows=32, warmup=8, n=2048)
 FULL = dict(windows=96, warmup=24, n=8192)
 
 
-def main(full: bool = False):
+def _write_csv(rows, preset: str):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR,
+                        f"app_validation{preset_suffix(preset)}.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0]))
+        w.writeheader()
+        w.writerows(rows)
+    return path
+
+
+def run_preset(preset: str, full: bool = False, stages=STAGES):
+    """Validate one device preset across the stage progression."""
     knobs = FULL if full else FAST
     names, traces = make_suite(n=knobs["n"])
     batch = stack_traces(traces)
-    anchors = anchor_suite_ms(traces)
+    anchors = anchor_suite_ms(traces, preset)
 
     t0 = time.perf_counter()
-    results = replay_stages(STAGES, batch, windows=knobs["windows"],
+    results = replay_stages(stages, batch, preset=preset,
+                            windows=knobs["windows"],
                             warmup=knobs["warmup"])
     wall = time.perf_counter() - t0
-    us = wall / (len(STAGES) * len(names)) * 1e6
+    us = wall / (len(stages) * len(names)) * 1e6
 
     rows = []
     for stage, out in results.items():
         err = mape(out["runtime_ms"], anchors)
-        emit(f"app_validation.{stage}.mape_pct", us, f"{err:.1f}")
+        emit(f"app_validation.{preset}.{stage}.mape_pct", us, f"{err:.1f}")
         for i, nm in enumerate(names):
             rows.append(dict(
-                stage=stage, app=nm,
+                preset=preset, stage=stage, app=nm,
                 runtime_ms=f"{out['runtime_ms'][i]:.5f}",
                 anchor_ms=f"{anchors[i]:.5f}",
                 err_pct=f"{100 * (out['runtime_ms'][i] / anchors[i] - 1):.1f}",
@@ -60,22 +78,29 @@ def main(full: bool = False):
                 app_lat_ns=f"{out['app_lat_ns'][i]:.1f}",
                 sim_bw_gbs=f"{out['sim_bw_gbs'][i]:.1f}",
             ))
-
-    os.makedirs(OUT_DIR, exist_ok=True)
-    path = os.path.join(OUT_DIR, "app_validation.csv")
-    with open(path, "w", newline="") as f:
-        w = csv.DictWriter(f, fieldnames=list(rows[0]))
-        w.writeheader()
-        w.writerows(rows)
+    _write_csv(rows, preset)
 
     # headline: correction narrative — MAPE of first vs last stage
-    first = mape(results[STAGES[0]]["runtime_ms"], anchors)
-    last = mape(results[STAGES[-1]]["runtime_ms"], anchors)
-    emit("app_validation.baseline_vs_corrected", us,
+    first = mape(results[stages[0]]["runtime_ms"], anchors)
+    last = mape(results[stages[-1]]["runtime_ms"], anchors)
+    emit(f"app_validation.{preset}.baseline_vs_corrected", us,
          f"{first:.1f} -> {last:.1f} (MAPE %, decoupling fixed)")
     return results
 
 
+def main(full: bool = False, preset: str = "ddr4_2666", grid: bool = False):
+    presets = PRESET_ORDER if grid else (preset,)
+    return {p: run_preset(p, full=full) for p in presets}
+
+
 if __name__ == "__main__":
-    import sys
-    main(full="--full" in sys.argv)
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--preset", default="ddr4_2666",
+                    choices=list(PRESET_ORDER))
+    ap.add_argument("--grid", action="store_true",
+                    help="run the full preset x stage x app grid")
+    args = ap.parse_args()
+    main(full=args.full, preset=args.preset, grid=args.grid)

@@ -4,31 +4,58 @@ Reproduces the paper's headline finding: the application view sits
 flat at ~24 ns across the whole bandwidth range, decoupled from the
 memory simulator's own statistics, while the interface view's
 bandwidth exceeds the theoretical maximum.
+
+The decoupling is a property of the bound/weave interface, not of one
+memory device — ``--preset ddr5_4800`` / ``--preset hbm2e`` rerun the
+characterization on the other device presets and report the same
+interface-inflation ratio plus each curve's deviation (MAPE) from that
+preset's measured reference curve.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.util import emit, run_sweep, write_csv
-from repro.core import get_stage
+from benchmarks.util import emit, preset_suffix, run_sweep, write_csv
+from repro.core import get_preset, reference
+from repro.core.presets import PRESET_ORDER
 
 
-def main(full: bool = False):
-    res, us = run_sweep("01-baseline", full=full)
-    write_csv(res, "fig2_baseline")
-    peak = get_stage("01-baseline").platform.dram.peak_gbs
+def main(full: bool = False, preset: str = "ddr4_2666"):
+    res, us = run_sweep("01-baseline", full=full, preset=preset)
+    suffix = preset_suffix(preset)
+    write_csv(res, f"fig2_baseline{suffix}")
+    peak = get_preset(preset).peak_gbs
 
     app_flat = float(np.ptp(res.app_lat[0]))
-    emit("fig2.app_latency_ns", us,
+    emit(f"fig2{suffix}.app_latency_ns", us,
          f"{res.app_lat[0, 0]:.1f} (paper: 24; flat +/-{app_flat:.2f})")
-    emit("fig2.sim_unloaded_ns", us,
+    emit(f"fig2{suffix}.sim_unloaded_ns", us,
          f"{res.sim_lat[0, 0]:.1f} (paper: 43)")
-    emit("fig2.if_bw_over_theoretical", us,
+    emit(f"fig2{suffix}.if_bw_over_theoretical", us,
          f"{res.if_bw.max() / peak:.2f}x (paper: 1.4x; >1 = bug visible)")
-    emit("fig2.sim_saturation_gbs", us,
-         f"{res.sim_bw.max():.1f} (paper: 100-120)")
+    emit(f"fig2{suffix}.sim_saturation_gbs", us,
+         f"{res.sim_bw.max():.1f} (reference: "
+         f"{reference.max_bandwidth_gbs(1.0, preset):.0f})")
+
+    # per-mix deviation of the simulator-view curve from the preset's
+    # measured reference curve (the Mess-style validation number)
+    errs = []
+    for i in range(len(res.write_mixes)):
+        rf = res.read_fraction(i)
+        ref_lat = reference.latency_ns(res.sim_bw[i], rf, preset)
+        errs.append(np.mean(np.abs(res.sim_lat[i] - ref_lat)
+                            / np.maximum(ref_lat, 1e-9)) * 100.0)
+    emit(f"fig2{suffix}.sim_curve_mape_pct", us,
+         f"{float(np.mean(errs)):.1f} (vs {preset} reference curves)")
     return res
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--preset", default="ddr4_2666",
+                    choices=list(PRESET_ORDER))
+    args = ap.parse_args()
+    main(full=args.full, preset=args.preset)

@@ -1,0 +1,75 @@
+"""One registry of benchmark entry points.
+
+Every benchmark module exposes ``main(full: bool = False, **kw)`` and
+writes its artifacts under ``reports/benchmarks/``.  This registry is
+the single source of truth consumed by:
+
+* ``benchmarks/run.py``      — runs benchmarks by name (``--only``),
+* ``scripts/reanalyze.py``   — lists benchmarks + their report globs,
+* docs                       — the table in docs/ARCHITECTURE.md.
+
+Adding a benchmark = adding one `BenchSpec` entry here (PR 1 bolted
+``app_validation`` onto the run.py dict by hand; don't repeat that).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchSpec:
+    """One benchmark entry point.
+
+    ``module`` is imported lazily (JAX-heavy imports stay off the
+    registry import path); ``reports`` are the CSV/JSON artifact globs
+    the benchmark writes under ``reports/benchmarks/``.
+    """
+
+    name: str
+    module: str                       # dotted module with main(full=...)
+    description: str
+    reports: tuple = ()               # artifact globs under reports/
+
+    @property
+    def main(self) -> Callable:
+        return importlib.import_module(self.module).main
+
+
+BENCHMARKS: dict[str, BenchSpec] = {s.name: s for s in (
+    BenchSpec("fig2", "benchmarks.fig2_baseline",
+              "baseline three-view characterization (per preset)",
+              ("fig2_baseline*.csv",)),
+    BenchSpec("fig3_fig4", "benchmarks.fig3_fig4_clocking",
+              "clock-scaling progression (Fig. 3/4)",
+              ("fig3*.csv", "fig4*.csv")),
+    BenchSpec("fig5", "benchmarks.fig5_model_correct",
+              "PI-controlled immediate response (Fig. 5)",
+              ("fig5*.csv",)),
+    BenchSpec("fig6", "benchmarks.fig6_enhancements",
+              "addrmap / NOC / prefetch enhancements (Fig. 6)",
+              ("fig6*.csv",)),
+    BenchSpec("fig7", "benchmarks.fig7_portability",
+              "backend-flavor portability (Fig. 7)",
+              ("fig7*.csv",)),
+    BenchSpec("kernels", "benchmarks.kernels_bench",
+              "Pallas kernel micro-benchmarks",
+              ()),
+    BenchSpec("roofline", "benchmarks.roofline_bench",
+              "HLO roofline model benchmarks",
+              ()),
+    BenchSpec("app_validation", "benchmarks.app_validation",
+              "per-app runtime MAPE vs per-preset anchors "
+              "(--preset / --grid)",
+              ("app_validation*.csv",)),
+)}
+
+
+def get_benchmark(name: str) -> BenchSpec:
+    try:
+        return BENCHMARKS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown benchmark {name!r}; one of {list(BENCHMARKS)}"
+        ) from None

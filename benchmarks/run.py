@@ -2,13 +2,19 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.  ``--full`` runs the
 paper-resolution sweeps (14 paces x 5 mixes, 96 windows); the default
-is CI-speed (6 paces x 3 mixes, 48 windows).
+is CI-speed (6 paces x 3 mixes, 48 windows).  The benchmark set comes
+from the single registry in `benchmarks.registry` (``--list`` shows
+it); ``--preset`` forwards a memory-device preset to the benchmarks
+that accept one (fig2, app_validation).
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
+
+from benchmarks.registry import BENCHMARKS, get_benchmark
 
 
 def main() -> None:
@@ -16,30 +22,28 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names (fig2,...)")
+    ap.add_argument("--preset", default=None,
+                    help="device preset for preset-aware benchmarks")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered benchmarks and exit")
     args = ap.parse_args()
 
-    from benchmarks import (app_validation, fig2_baseline,
-                            fig3_fig4_clocking, fig5_model_correct,
-                            fig6_enhancements, fig7_portability,
-                            kernels_bench, roofline_bench)
-    benches = {
-        "fig2": fig2_baseline.main,
-        "fig3_fig4": fig3_fig4_clocking.main,
-        "fig5": fig5_model_correct.main,
-        "fig6": fig6_enhancements.main,
-        "fig7": fig7_portability.main,
-        "kernels": kernels_bench.main,
-        "roofline": roofline_bench.main,
-        "app_validation": app_validation.main,
-    }
-    only = set(args.only.split(",")) if args.only else None
+    if args.list:
+        for spec in BENCHMARKS.values():
+            print(f"{spec.name:16s} {spec.description}")
+        return
+
+    names = args.only.split(",") if args.only else list(BENCHMARKS)
+    specs = [get_benchmark(n) for n in names]
     print("name,us_per_call,derived")
     t0 = time.time()
-    for name, fn in benches.items():
-        if only and name not in only:
-            continue
-        print(f"# --- {name} ---", file=sys.stderr)
-        fn(full=args.full)
+    for spec in specs:
+        print(f"# --- {spec.name} ---", file=sys.stderr)
+        kw = {}
+        if args.preset and "preset" in inspect.signature(
+                spec.main).parameters:
+            kw["preset"] = args.preset
+        spec.main(full=args.full, **kw)
     print(f"# total {time.time() - t0:.0f}s", file=sys.stderr)
 
 

@@ -17,9 +17,15 @@ FAST_MIXES = (0, 16, 32)
 FAST_WINDOWS = dict(windows=48, warmup=16)
 
 
-def run_sweep(stage: str, *, full: bool = False):
+def preset_suffix(preset: str) -> str:
+    """Artifact/metric-name suffix: empty for the paper's DDR4 device."""
+    return "" if preset == "ddr4_2666" else f"_{preset}"
+
+
+def run_sweep(stage: str, *, full: bool = False,
+              preset: str = "ddr4_2666"):
     kw = {} if full else FAST_WINDOWS
-    cfg = get_stage(stage, **kw)
+    cfg = get_stage(stage, preset=preset, **kw)
     t0 = time.perf_counter()
     res = sweep(cfg,
                 paces=DEFAULT_PACES if full else FAST_PACES,

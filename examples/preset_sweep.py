@@ -1,0 +1,57 @@
+"""Fleet-scale scenario grid: preset x stage x application in one call.
+
+Replays the DAMOV-style application suite on every memory-device preset
+(DDR4-2666, DDR5-4800, HBM2e) across two simulation stages — the
+broken baseline and the corrected interface — and prints, per cell,
+the predicted runtimes plus the MAPE against that preset's own
+real-system anchors.
+
+Each (preset, stage) cell is one compiled program; the application
+axis is sharded across every available device (`repro.core.shard`),
+falling back to plain `jax.vmap` on a single CPU.  To see actual
+multi-device sharding on a CPU-only machine:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+        PYTHONPATH=src python examples/preset_sweep.py
+
+Run:  PYTHONPATH=src python examples/preset_sweep.py
+"""
+import jax
+
+from repro.core import PRESET_ORDER, get_preset
+from repro.core.shard import device_count
+from repro.traces import anchor_suite_ms, make_suite, mape, replay_grid, \
+    stack_traces
+
+STAGES = ("01-baseline", "04-model-correct")
+
+
+def main():
+    names, traces = make_suite(n=1024)
+    batch = stack_traces(traces)
+    print(f"devices: {device_count()} ({jax.devices()[0].platform}); "
+          f"app axis sharded across all of them\n")
+
+    grid = replay_grid(PRESET_ORDER, STAGES, batch, windows=24, warmup=8)
+
+    for preset, stages in grid.items():
+        anchors = anchor_suite_ms(traces, preset)
+        peak = get_preset(preset).peak_gbs
+        print(f"== {preset}  (theoretical peak {peak:.0f} GB/s)")
+        for stage, out in stages.items():
+            err = mape(out["runtime_ms"], anchors)
+            print(f"  [{stage}]  runtime MAPE vs {preset} anchors: "
+                  f"{err:5.1f}%")
+            for i, nm in enumerate(names):
+                print(f"     {nm:14s} {out['runtime_ms'][i]:8.4f} ms "
+                      f"(anchor {anchors[i]:8.4f} ms, "
+                      f"sim {out['sim_bw_gbs'][i]:6.1f} GB/s)")
+        print()
+    print("-> the baseline's decoupled app view replays latency-bound"
+          "\n   kernels far too fast on every device generation; the"
+          "\n   corrected interface recouples them (the paper's claim,"
+          "\n   re-validated per preset).")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,16 +24,22 @@ def part1_simulator():
     print("=" * 64)
     print("1) Memory-system simulation: three views, two stages")
     print("=" * 64)
+    # stage + device preset come from the registries (repro.core.stages
+    # / repro.core.presets) — never hand-build DramParams.  Swap the
+    # preset to "ddr5_4800" / "hbm2e" to rerun on another device.
+    preset = "ddr4_2666"
     for stage in ("01-baseline", "04-model-correct"):
-        res = sweep(get_stage(stage, windows=32, warmup=12),
+        res = sweep(get_stage(stage, preset=preset, windows=32, warmup=12),
                     paces=(2, 24, 56), write_mixes=(0,))
-        print(f"\n[{stage}] bandwidth sweep (100% reads):")
+        print(f"\n[{stage} @ {preset}] bandwidth sweep (100% reads):")
         print("   used GB/s | sim-view ns | iface ns | APP ns")
         for j in range(len(res.paces)):
             print(f"   {res.app_bw[0, j]:9.1f} | {res.sim_lat[0, j]:11.1f}"
                   f" | {res.if_lat[0, j]:8.1f} | {res.app_lat[0, j]:6.1f}")
     print("\n-> baseline app view is stuck at ~24 ns (the decoupling "
-          "bug);\n   the corrected stage tracks the memory system.")
+          "bug);\n   the corrected stage tracks the memory system.\n"
+          "   (examples/preset_sweep.py runs the preset x stage x app "
+          "grid.)")
 
 
 def part2_train_and_serve():

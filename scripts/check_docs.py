@@ -1,0 +1,123 @@
+"""Cross-reference checker for the docs (CI docs job).
+
+Fails (exit 1) if any of these are broken in docs/*.md or README.md:
+
+* relative markdown links ``[text](path)``;
+* repo paths like ``src/repro/core/dram.py`` or ``benchmarks/run.py``
+  (globs with ``*`` allowed — they must match at least one file);
+* dotted module references ``repro.x.y[.attr]`` — the longest module
+  prefix must import and any attribute remainder must resolve;
+* the module-map block in docs/ARCHITECTURE.md: every ``name.py`` /
+  ``name/`` entry must exist under its section's directory.
+
+Run:  PYTHONPATH=src python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import glob
+import importlib
+import importlib.util
+import os
+import re
+import sys
+
+ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+DOCS = [os.path.join(ROOT, "README.md"),
+        *sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))]
+
+_errors: list[str] = []
+
+
+def err(doc: str, msg: str) -> None:
+    _errors.append(f"{os.path.relpath(doc, ROOT)}: {msg}")
+
+
+def check_links(doc: str, text: str) -> None:
+    for m in re.finditer(r"\[[^\]]+\]\(([^)#\s]+)(?:#[^)]*)?\)", text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://")):
+            continue
+        path = os.path.normpath(os.path.join(os.path.dirname(doc), target))
+        if not os.path.exists(path):
+            err(doc, f"broken link -> {target}")
+
+
+def check_paths(doc: str, text: str) -> None:
+    pat = r"(?<![\w/])((?:src|benchmarks|examples|scripts|tests|docs)/[\w/.*-]+)"
+    for m in re.finditer(pat, text):
+        rel = m.group(1).rstrip(".")
+        matches = glob.glob(os.path.join(ROOT, rel))
+        if not matches:
+            err(doc, f"missing path -> {rel}")
+
+
+def check_modules(doc: str, text: str) -> None:
+    seen = set()
+    for m in re.finditer(r"\brepro(?:\.\w+)+", text):
+        name = m.group(0)
+        if name in seen:
+            continue
+        seen.add(name)
+        parts = name.split(".")
+        for cut in range(len(parts), 0, -1):
+            mod = ".".join(parts[:cut])
+            try:
+                found = importlib.util.find_spec(mod) is not None
+            except ModuleNotFoundError:
+                found = False
+            if found:
+                break
+        else:
+            err(doc, f"unresolvable module -> {name}")
+            continue
+        rest = parts[cut:]
+        if rest:
+            obj = importlib.import_module(mod)
+            for attr in rest:
+                if not hasattr(obj, attr):
+                    err(doc, f"module {mod} has no attribute "
+                             f"{'.'.join(rest)} (from {name})")
+                    break
+                obj = getattr(obj, attr)
+
+
+def check_module_map(doc: str, text: str) -> None:
+    """The first fenced block of ARCHITECTURE.md is the module map."""
+    m = re.search(r"```\n(src/repro/.*?)```", text, re.S)
+    if not m:
+        err(doc, "module-map block not found")
+        return
+    current = None
+    for line in m.group(1).splitlines():
+        head = re.match(r"^(\S+?)/\s", line + " ")
+        entry = re.match(r"^\s+([\w.]+(?:\.py|/))\s", line)
+        if head and not line.startswith(" "):
+            current = head.group(1)
+            if not os.path.isdir(os.path.join(ROOT, current)):
+                err(doc, f"module-map directory missing -> {current}")
+        elif entry and current:
+            path = os.path.join(ROOT, current, entry.group(1).rstrip("/"))
+            if not (os.path.exists(path) or os.path.isdir(path)):
+                err(doc, f"module-map entry missing -> "
+                         f"{current}/{entry.group(1)}")
+
+
+def main() -> int:
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    for doc in DOCS:
+        with open(doc) as f:
+            text = f.read()
+        check_links(doc, text)
+        check_paths(doc, text)
+        check_modules(doc, text)
+        if doc.endswith("ARCHITECTURE.md"):
+            check_module_map(doc, text)
+    for e in _errors:
+        print(f"BROKEN  {e}")
+    print(f"checked {len(DOCS)} docs: "
+          f"{'FAIL' if _errors else 'all cross-references resolve'}")
+    return 1 if _errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

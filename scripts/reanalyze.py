@@ -3,22 +3,35 @@
 Used when the HLO cost model improves: reads the .hlo.zst cached next
 to each dry-run JSON, re-runs `hlo_cost.analyze`, and rewrites the
 roofline terms in place.
+
+``--list-benchmarks`` prints the registered benchmark entry points and
+the report artifacts each one owns — the same single registry
+(`benchmarks.registry`) that drives ``benchmarks/run.py``, so this
+script and the runner always agree on what exists.
 """
 import glob
 import json
 import os
 import sys
 
-import zstandard
+try:                           # optional: only needed to re-read HLO blobs
+    import zstandard
+except ImportError:            # pragma: no cover - container without zstd
+    zstandard = None
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-from repro.perfmodel import hlo_cost, roofline as roof  # noqa: E402
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
 
 
 def reanalyze(json_path: str) -> bool:
+    from repro.perfmodel import hlo_cost, roofline as roof
+
     hlo_path = json_path.replace(".json", ".hlo.zst")
     if not os.path.exists(hlo_path):
         return False
+    if zstandard is None:
+        raise SystemExit("reanalyze needs the 'zstandard' package")
     with open(hlo_path, "rb") as f:
         text = zstandard.ZstdDecompressor().decompress(f.read()).decode()
     with open(json_path) as f:
@@ -38,8 +51,24 @@ def reanalyze(json_path: str) -> bool:
     return True
 
 
+def list_benchmarks():
+    """Print the benchmark registry with each one's report artifacts."""
+    from benchmarks.registry import BENCHMARKS
+
+    bench_dir = os.path.join(_ROOT, "reports", "benchmarks")
+    for spec in BENCHMARKS.values():
+        found = [os.path.basename(p) for pat in spec.reports
+                 for p in sorted(glob.glob(os.path.join(bench_dir, pat)))]
+        reports = ", ".join(found) if found else "(no reports on disk)"
+        print(f"{spec.name:16s} {spec.description}")
+        print(f"{'':16s}   -> {reports}")
+
+
 def main():
-    root = os.path.join(os.path.dirname(__file__), "..", "reports")
+    if "--list-benchmarks" in sys.argv:
+        list_benchmarks()
+        return
+    root = os.path.join(_ROOT, "reports")
     pats = sys.argv[1:] or [os.path.join(root, "dryrun*", "*", "*.json")]
     n = 0
     for pat in pats:

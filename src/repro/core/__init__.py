@@ -6,17 +6,23 @@ Public API:
 * `run_frontend`              — same platform under any bound-phase
                                 frontend (Mess pace or trace replay).
 * `STAGES`, `get_stage`       — the artifact's stage progression.
+* `PRESETS`, `get_preset`, `stage_for` — DDR4/DDR5/HBM2e device
+                                presets (`repro.core.presets`).
 * `sweep`                     — Mess bandwidth-latency characterization.
 * `make_policy`               — Ramulator/Ramulator2/DRAMsim3 flavors.
-* `reference`                 — measured Skylake ground-truth curves.
+* `reference`                 — per-preset real-system ground-truth
+                                curves (measured-anchor families).
 """
 from repro.core.backends import BACKENDS, make_policy
 from repro.core.mess import SweepResult, sweep
 from repro.core.platform import StageConfig, run_frontend, run_point
+from repro.core.presets import (PRESET_ORDER, PRESETS, get_preset,
+                                platform_for, stage_for)
 from repro.core.stages import STAGES, STAGE_ORDER, get_stage
 
 __all__ = [
     "BACKENDS", "make_policy", "SweepResult", "sweep",
     "StageConfig", "run_frontend", "run_point",
     "STAGES", "STAGE_ORDER", "get_stage",
+    "PRESETS", "PRESET_ORDER", "get_preset", "platform_for", "stage_for",
 ]

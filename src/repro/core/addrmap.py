@@ -19,9 +19,19 @@ inside `lax.scan`:
                     scatter across banks and write drains collide with
                     reader-open rows, reproducing the measured gradient.
 
+Both mappings are **geometry-parameterized**: pass a `DramParams` (any
+`repro.core.presets` device) and the fields are decoded against that
+preset's channel/rank/bank/row geometry.  With no ``dram`` argument the
+paper's DDR4-2666 geometry is used, bit-for-bit as before.  The
+``skylake_xor`` bit positions are only meaningful on the DDR4 geometry
+they were reverse-engineered from; on any other preset the request is
+served by `decode_xor_fold`, a generic XOR-folded mapping with the same
+fidelity-relevant property (fine-grain scatter + row-bit mixing).
+
 Field packing (line index, little endian):  the mapping functions return
 int32 fields; `flat_bank` = rank * banks_per_rank + bank is what the
-bank-state arrays are indexed by.
+bank-state arrays are indexed by (use `DecodedAddr.flat_bank_for` for
+non-default geometries).
 """
 from __future__ import annotations
 
@@ -39,15 +49,20 @@ N_CHANNELS = 6
 
 
 class DecodedAddr(NamedTuple):
-    channel: jnp.ndarray   # [0, 6)
-    rank: jnp.ndarray      # [0, 2)
-    bank: jnp.ndarray      # [0, 16)  (bank-group folded: bg = bank >> 2)
-    row: jnp.ndarray       # [0, 2^17)
-    col: jnp.ndarray       # [0, 128) line-within-row
+    channel: jnp.ndarray   # [0, n_channels)
+    rank: jnp.ndarray      # [0, ranks_per_channel)
+    bank: jnp.ndarray      # [0, banks_per_rank)
+    row: jnp.ndarray       # [0, rows_per_bank)
+    col: jnp.ndarray       # [0, lines_per_row) line-within-row
 
     @property
     def flat_bank(self):
+        """``rank * banks_per_rank + bank`` on the DDR4 geometry."""
         return self.rank * N_BANKS + self.bank
+
+    def flat_bank_for(self, dram: DramParams):
+        """Geometry-aware bank-state index: rank * banks_per_rank + bank."""
+        return self.rank * dram.banks_per_rank + self.bank
 
     @property
     def bank_group(self):
@@ -58,17 +73,26 @@ def _bit(x, i):
     return (x >> i) & 1
 
 
-def decode_simple(line, xp=jnp) -> DecodedAddr:
-    """RoBaRaCoCh: ch | col | rank | bank | row  (low -> high bits)."""
+def decode_simple(line, xp=jnp, dram: DramParams | None = None) -> DecodedAddr:
+    """RoBaRaCoCh: ch | col | rank | bank | row  (low -> high bits).
+
+    ``dram`` selects the geometry (channels / ranks / banks / row
+    reach); omitted, the DDR4-2666 default applies, unchanged.
+    """
+    C = dram.n_channels if dram else N_CHANNELS
+    R = dram.ranks_per_channel if dram else N_RANKS
+    B = dram.banks_per_rank if dram else N_BANKS
+    lpr = dram.lines_per_row if dram else LINES_PER_ROW
+    row_mask = (dram.rows_per_bank if dram else (1 << 17)) - 1
     line = xp.asarray(line).astype(xp.uint32)
-    ch = (line % N_CHANNELS).astype(xp.int32)
-    a = line // N_CHANNELS
-    col = (a % LINES_PER_ROW).astype(xp.int32)
-    a = a // LINES_PER_ROW
-    rank = (a % N_RANKS).astype(xp.int32)
-    a = a // N_RANKS
-    bank = (a % N_BANKS).astype(xp.int32)
-    row = ((a // N_BANKS) & 0x1FFFF).astype(xp.int32)
+    ch = (line % C).astype(xp.int32)
+    a = line // C
+    col = (a % lpr).astype(xp.int32)
+    a = a // lpr
+    rank = (a % R).astype(xp.int32)
+    a = a // R
+    bank = (a % B).astype(xp.int32)
+    row = ((a // B) & row_mask).astype(xp.int32)
     return DecodedAddr(ch, rank, bank, row, col)
 
 
@@ -101,19 +125,66 @@ def decode_skylake_xor(line, xp=jnp) -> DecodedAddr:
     return DecodedAddr(ch, rank, bank, row, col)
 
 
+def decode_xor_fold(line, dram: DramParams, xp=jnp) -> DecodedAddr:
+    """Generic XOR-folded mapping for non-DDR4 geometries.
+
+    Carries the fidelity-relevant properties of the reverse-engineered
+    Skylake mapping — channel/bank selects hash low *and* high (row)
+    bits so sequential streams scatter fine-grain across channels and
+    banks — expressed over an arbitrary `DramParams` geometry instead
+    of DRAMDig's fixed DDR4 bit positions.
+    """
+    C = dram.n_channels
+    R = dram.ranks_per_channel
+    B = dram.banks_per_rank
+    lpr = dram.lines_per_row
+    row_mask = dram.rows_per_bank - 1
+    line = xp.asarray(line).astype(xp.uint32)
+    mix = line ^ (line >> 6) ^ (line >> 12) ^ (line >> 18)
+    ch = (mix % C).astype(xp.int32)
+    a = line // C
+    col = ((a ^ (a >> 9)) % lpr).astype(xp.int32)
+    bank = (((a // lpr) ^ (line >> 13)) % B).astype(xp.int32)
+    rank = (((line >> 8) ^ (line >> 17)) % R).astype(xp.int32)
+    row = ((line >> 9) & row_mask).astype(xp.int32)
+    return DecodedAddr(ch, rank, bank, row, col)
+
+
 MAPPINGS = {
     "simple": decode_simple,
     "skylake_xor": decode_skylake_xor,
 }
 
+_DDR4_GEOMETRY = (N_CHANNELS, N_RANKS, N_BANKS, LINES_PER_ROW, 1 << 17)
 
-def decode(line, mapping: str = "simple", xp=jnp) -> DecodedAddr:
-    try:
-        fn = MAPPINGS[mapping]
-    except KeyError:
+
+def _is_default_geometry(dram: DramParams | None) -> bool:
+    return dram is None or (
+        dram.n_channels, dram.ranks_per_channel, dram.banks_per_rank,
+        dram.lines_per_row, dram.rows_per_bank) == _DDR4_GEOMETRY
+
+
+def decode(line, mapping: str = "simple", xp=jnp,
+           dram: DramParams | None = None) -> DecodedAddr:
+    """Decode cache-line indices against a mapping + device geometry.
+
+    Args:
+        line: uint32 cache-line indices (byte address >> 6), any shape.
+        mapping: ``"simple"`` or ``"skylake_xor"``.
+        dram: device geometry; ``None`` means the DDR4-2666 default.
+            ``"skylake_xor"`` on a non-DDR4 geometry falls back to the
+            generic `decode_xor_fold` (same scatter properties).
+    Returns:
+        `DecodedAddr` int32 fields, each in its geometry's range.
+    """
+    if mapping not in MAPPINGS:
         raise ValueError(f"unknown mapping {mapping!r}; "
-                         f"one of {sorted(MAPPINGS)}") from None
-    return fn(line, xp=xp)
+                         f"one of {sorted(MAPPINGS)}")
+    if mapping == "simple":
+        return decode_simple(line, xp=xp, dram=dram)
+    if _is_default_geometry(dram):
+        return decode_skylake_xor(line, xp=xp)
+    return decode_xor_fold(line, dram, xp=xp)
 
 
 def check_fields(dec: DecodedAddr, dram: DramParams | None = None) -> bool:
@@ -125,5 +196,5 @@ def check_fields(dec: DecodedAddr, dram: DramParams | None = None) -> bool:
         and (np.asarray(dec.rank) < d.ranks_per_channel).all()
         and (np.asarray(dec.bank) < d.banks_per_rank).all()
         and (np.asarray(dec.row) < d.rows_per_bank).all()
-        and (np.asarray(dec.col) < LINES_PER_ROW).all()
+        and (np.asarray(dec.col) < d.lines_per_row).all()
     )

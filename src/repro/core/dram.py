@@ -2,9 +2,13 @@
 
 A JAX-native reimplementation of the Ramulator-class cycle-accurate
 memory simulation used in the paper: per-bank state machines with the
-full DDR4 timing set (tRCD/tRP/tCL/tRAS/tCCD_S/L/tWTR/tRTP/tRRD/tFAW/
+full DDRx timing set (tRCD/tRP/tCL/tRAS/tCCD_S/L/tWTR/tRTP/tRRD/tFAW/
 tREFI/tRFC), FR-FCFS scheduling with open-page policy, watermark-based
-write draining, rank-aware bus turnaround, and per-rank refresh.
+write draining, rank-aware bus turnaround, and per-rank (all-bank) or
+rotating per-bank (DDR5 REFsb) refresh.  The device geometry and
+timings come from a `DramParams` instance — DDR4-2666 by default, or
+any preset from `repro.core.presets` (DDR5-4800, HBM2e); nothing in
+this module assumes a fixed channel/rank/bank-group count.
 
 Everything is vectorized over (channel, queue-slot) and
 (channel, rank*bank) so one simulated memory tick is a fixed dataflow
@@ -69,6 +73,11 @@ class QueueState(NamedTuple):
 
 
 class BankState(NamedTuple):
+    """Per-bank / per-channel controller state; all times in DRAM ticks.
+
+    ``C`` = channels, ``R`` = ranks/channel, ``RB`` = ranks x banks.
+    """
+
     open_row: jnp.ndarray      # (C, RB) int32, -1 = precharged
     next_act: jnp.ndarray      # (C, RB) earliest tick for ACT
     next_rd: jnp.ndarray       # (C, RB)
@@ -76,6 +85,7 @@ class BankState(NamedTuple):
     next_pre: jnp.ndarray      # (C, RB)
     faw: jnp.ndarray           # (C, R, 4) last four ACT ticks, oldest first
     next_ref: jnp.ndarray      # (C, R) next refresh deadline
+    ref_slot: jnp.ndarray      # (C, R) rotating REFsb bank index (DDR5)
     bus_free: jnp.ndarray      # (C,) data-bus free tick
     wtr_until: jnp.ndarray     # (C,) reads blocked until (write->read turn)
     rtw_until: jnp.ndarray     # (C,) writes blocked until (read->write turn)
@@ -85,6 +95,14 @@ class BankState(NamedTuple):
 
 
 class TickStats(NamedTuple):
+    """One tick's completion statistics.
+
+    Latency units differ by view on purpose: ``sum_rd_lat_ticks`` is
+    DRAM ticks (view ① — multiply by ``dram_ps_per_clk`` for time),
+    ``sum_if_lat_ps`` is CPU-perceived picoseconds (view ② — already
+    crossed the clock domain).
+    """
+
     served_rd: jnp.ndarray         # scalar int32
     served_wr: jnp.ndarray
     sum_rd_lat_ticks: jnp.ndarray  # simulator view: completion - arrival
@@ -98,6 +116,7 @@ N_CORES_STAT = 24
 
 
 def init_queue(dram: DramParams, policy: SchedulerPolicy) -> QueueState:
+    """Empty per-channel request queue: (C, queue_depth) int32 slots."""
     C, Q = dram.n_channels, policy.queue_depth
     z = jnp.zeros((C, Q), jnp.int32)
     return QueueState(valid=z, is_write=z, arrival=z, issue_cycle=z,
@@ -105,6 +124,7 @@ def init_queue(dram: DramParams, policy: SchedulerPolicy) -> QueueState:
 
 
 def init_banks(dram: DramParams) -> BankState:
+    """All banks precharged, refresh deadlines staggered across ranks."""
     C = dram.n_channels
     RB = dram.banks_per_channel
     R = dram.ranks_per_channel
@@ -117,6 +137,7 @@ def init_banks(dram: DramParams) -> BankState:
         next_ref=(dram.tREFI
                   + jnp.arange(R, dtype=jnp.int32)[None, :] * (dram.tREFI // R)
                   + jnp.zeros((C, R), jnp.int32)),
+        ref_slot=jnp.zeros((C, R), jnp.int32),
         bus_free=jnp.zeros((C,), jnp.int32),
         wtr_until=jnp.zeros((C,), jnp.int32),
         rtw_until=jnp.zeros((C,), jnp.int32),
@@ -137,24 +158,47 @@ def tick(queue: QueueState, banks: BankState, t, *,
          active=True):
     """Advance the memory system by one DRAM tick.
 
-    Returns (queue', banks', TickStats).  ``active`` gates windows whose
-    static tick budget exceeds the clock model's exact tick count.
+    Args:
+        queue, banks: current `QueueState` / `BankState`.
+        t: current DRAM tick (int32, traced).
+        dram, policy: static device timings + controller flavor.
+        tick2cpu_num, tick2cpu_den: DRAM tick -> CPU-perceived
+            picoseconds under the active clock model
+            (``cpu_ps = tick * num // den``).
+        cpu_ps_per_clk: CPU picoseconds per CPU cycle (476 for 2.1 GHz).
+        active: gates windows whose static tick budget exceeds the
+            clock model's exact tick count (inactive ticks are no-ops).
+
+    Returns:
+        ``(queue', banks', TickStats)``.  Latencies in `TickStats` are
+        DRAM ticks (simulator view) and picoseconds (interface view).
     """
     C = dram.n_channels
     RB = dram.banks_per_channel
     nbanks = dram.banks_per_rank
     cidx = jnp.arange(C)
 
-    # ---- refresh: close the rank and block it for tRFC --------------
+    # ---- refresh ----------------------------------------------------
+    # All-bank (DDR4/HBM2e): close the whole rank, block it for tRFC.
+    # Same-bank (DDR5 REFsb): block only the rotating target bank for
+    # tRFCsb; the rest of the rank keeps serving.
     ref_due = active & (t >= banks.next_ref)                    # (C, R)
-    rankmask = jnp.repeat(ref_due, nbanks, axis=1)              # (C, RB)
-    open_row = jnp.where(rankmask, -1, banks.open_row)
-    next_act = jnp.where(rankmask,
+    refmask = jnp.repeat(ref_due, nbanks, axis=1)               # (C, RB)
+    if dram.same_bank_refresh:
+        bank_in_rank = jnp.arange(RB, dtype=jnp.int32) % nbanks
+        target = jnp.repeat(banks.ref_slot, nbanks, axis=1)     # (C, RB)
+        refmask = refmask & (bank_in_rank[None, :] == target)
+        ref_slot = jnp.where(ref_due, (banks.ref_slot + 1) % nbanks,
+                             banks.ref_slot)
+    else:
+        ref_slot = banks.ref_slot
+    open_row = jnp.where(refmask, -1, banks.open_row)
+    next_act = jnp.where(refmask,
                          jnp.maximum(banks.next_act, t + dram.tRFC),
                          banks.next_act)
     next_ref = jnp.where(ref_due, banks.next_ref + dram.tREFI, banks.next_ref)
     banks = banks._replace(open_row=open_row, next_act=next_act,
-                           next_ref=next_ref)
+                           next_ref=next_ref, ref_slot=ref_slot)
 
     # ---- write-drain hysteresis --------------------------------------
     arrived = (queue.valid == 1) & (queue.arrival <= t)         # (C, Q)
@@ -225,7 +269,7 @@ def tick(queue: QueueState, banks: BankState, t, *,
     s_issue = pick(queue.issue_cycle)
     s_core = pick(queue.core)
     s_rank = s_fb // nbanks
-    s_bg = (s_fb % nbanks) >> 2
+    s_bg = (s_fb % nbanks) // dram.banks_per_group
     s_iswr = pick(is_wr.astype(jnp.int32)) == 1
     s_chase = pick(queue.is_chase) == 1
     s_rd_ok = pick(elig_rd.astype(jnp.int32)) == 1
@@ -248,7 +292,7 @@ def tick(queue: QueueState, banks: BankState, t, *,
     bsel = (cidx, s_fb)
 
     # ACT
-    grp = (jnp.arange(RB) % nbanks) >> 2                        # (RB,)
+    grp = (jnp.arange(RB) % nbanks) // dram.banks_per_group     # (RB,)
     same_rank = (jnp.arange(RB) // nbanks)[None, :] == s_rank[:, None]
     same_grp = (grp[None, :] == s_bg[:, None]) & same_rank
     open_row = banks.open_row.at[bsel].set(
@@ -302,9 +346,10 @@ def tick(queue: QueueState, banks: BankState, t, *,
 
     banks = BankState(open_row=open_row, next_act=nact, next_rd=nrd,
                       next_wr=nwr, next_pre=npre, faw=faw, next_ref=next_ref,
-                      bus_free=bus_free, wtr_until=wtr_until,
-                      rtw_until=rtw_until, last_rank=last_rank,
-                      drain=drain, hit_streak=hit_streak)
+                      ref_slot=ref_slot, bus_free=bus_free,
+                      wtr_until=wtr_until, rtw_until=rtw_until,
+                      last_rank=last_rank, drain=drain,
+                      hit_streak=hit_streak)
 
     # retire CAS'd entries
     served = jnp.zeros_like(queue.valid).at[cidx, sel].set(

@@ -9,10 +9,12 @@ views.
 
 This module drives `platform.run_point` over the (pace x write-mix)
 grid.  Pace points are `vmap`-ed — one XLA program simulates the whole
-curve — and write mixes iterate in Python (they change traffic shape,
-not shapes of arrays, but keeping the grid 1-D per compile keeps XLA
-compile time low and matches how Mess runs on real hardware: one
-process per mix).
+curve — and the pace axis is sharded across every available device via
+`repro.core.shard.sharded_vmap` (plain vmap on one device, bit-
+identical either way).  Write mixes iterate in Python (they change
+traffic shape, not shapes of arrays, but keeping the grid 1-D per
+compile keeps XLA compile time low and matches how Mess runs on real
+hardware: one process per mix).
 
 Outputs are plain numpy arrays, written as CSV by the benchmark harness
 in the artifact's `bandwidth_latency.csv` format.
@@ -27,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.platform import StageConfig, run_point
+from repro.core.shard import sharded_vmap
 
 #: write-fraction numerators out of 64 -> read fractions 100..50%
 #: (Mess plots 100%-read lightest to 50%-read darkest).
@@ -76,9 +79,13 @@ class SweepResult:
 
 @functools.lru_cache(maxsize=None)
 def _sweep_fn(cfg: StageConfig):
-    """One compiled program: vmap over pace points for a fixed mix."""
-    return jax.jit(jax.vmap(lambda p, w: run_point(cfg, p, w),
-                            in_axes=(0, None)))
+    """One compiled program: device-sharded vmap over pace points.
+
+    The batched argument is a ``(pace, wr_num)`` pair with both leaves
+    batched, so one compile serves every write mix and the pace axis
+    shards across devices (vmap fallback on one device).
+    """
+    return sharded_vmap(lambda pw: run_point(cfg, pw[0], pw[1]))
 
 
 def sweep(cfg: StageConfig, paces=DEFAULT_PACES,
@@ -89,7 +96,7 @@ def sweep(cfg: StageConfig, paces=DEFAULT_PACES,
     acc = {k: [] for k in ("sim_bw", "sim_lat", "if_bw", "if_lat",
                            "app_bw", "app_lat", "chase_lat")}
     for wr in write_mixes:
-        out = jax.device_get(fn(pace_v, jnp.int32(wr)))
+        out = jax.device_get(fn((pace_v, jnp.full_like(pace_v, wr))))
         acc["sim_bw"].append(out["sim_bw_gbs"])
         acc["sim_lat"].append(out["sim_lat_ns"])
         acc["if_bw"].append(out["if_bw_gbs"])

@@ -47,7 +47,14 @@ PI_BLEND = 0.05      # paper: 5% new cycle-accurate average
 
 @dataclasses.dataclass(frozen=True)
 class StageConfig:
-    """Full static configuration of one simulation stage."""
+    """Full static configuration of one simulation stage.
+
+    Every field is static (hashable): one `StageConfig` = one XLA
+    program shape.  ``platform`` carries the CPU params and the memory
+    device (`DramParams` — the DDR4-2666 default or any preset from
+    `repro.core.presets`); ``l_ir_init_cycles`` is in CPU cycles,
+    ``windows``/``warmup`` count 1000-cycle ZSim windows.
+    """
 
     name: str = "01-baseline"
     clock_mode: str = "broken_noscale"
@@ -73,7 +80,8 @@ class StageConfig:
         return WorkloadConfig(
             mapping=self.mapping, prefetch=self.prefetch,
             cache_path_cycles=self.platform.cpu.cache_path_cycles,
-            noc_req_cycles=n.req_cycles, noc_resp_cycles=n.resp_cycles)
+            noc_req_cycles=n.req_cycles, noc_resp_cycles=n.resp_cycles,
+            dram=self.platform.dram)
 
 
 class WindowOut(NamedTuple):
@@ -159,13 +167,19 @@ def _window_step(cfg: StageConfig, clock: ClockModel, wcfg: WorkloadConfig,
 def run_frontend(cfg: StageConfig, frontend):
     """Simulate the platform driven by any bound-phase frontend.
 
-    ``frontend`` follows the protocol documented on
-    `workload.MessFrontend`; it may close over traced arrays, so this
-    function is `vmap`-able across operating points (Mess) or
-    applications (trace replay).  Returns ``(views, outs)`` — the
-    aggregated three-view dict of scalars plus the raw per-window
-    `WindowOut` trajectory (used by the replay engine to locate the
-    trace-completion window).
+    Args:
+        cfg: static stage configuration (one XLA program per value).
+        frontend: object following the protocol documented on
+            `workload.MessFrontend`; it may close over traced arrays,
+            so this function is `vmap`-able — and thus shardable via
+            `repro.core.shard.sharded_vmap` — across operating points
+            (Mess) or applications (trace replay).
+    Returns:
+        ``(views, outs)``: the aggregated three-view dict of scalars
+        (bandwidths in GB/s, latencies in ns — see `_aggregate` for
+        which clock domain each view reads) plus the raw per-window
+        `WindowOut` trajectory (used by the replay engine to locate
+        the trace-completion window).
     """
     clock = cfg.clock()
     wcfg = cfg.workload_config()
@@ -189,8 +203,17 @@ def run_frontend(cfg: StageConfig, frontend):
 def run_point(cfg: StageConfig, pace, wr_num):
     """Simulate one Mess operating point; returns the three views.
 
-    pace:   requests / traffic core / window (int32, traced — vmap-able)
-    wr_num: write-fraction numerator out of 64 (int32, traced)
+    Args:
+        cfg: static stage configuration.
+        pace: demand requests / traffic core / window
+            (int32, traced — vmap-able).
+        wr_num: write-fraction numerator out of 64 (int32, traced).
+    Returns:
+        The three-view dict: ``sim_bw_gbs`` / ``if_bw_gbs`` /
+        ``app_bw_gbs`` in GB/s, ``sim_lat_ns`` / ``if_lat_ns`` /
+        ``app_lat_ns`` / ``chase_lat_ns`` in ns, plus diagnostics
+        (``n_rd``/``n_wr`` served counts, ``l_ir_final`` in CPU
+        cycles, ``injected`` accepted requests).
     """
     frontend = workload.MessFrontend(pace, wr_num, cfg.workload_config())
     views, _ = run_frontend(cfg, frontend)
@@ -198,6 +221,14 @@ def run_point(cfg: StageConfig, pace, wr_num):
 
 
 def _aggregate(cfg: StageConfig, outs: WindowOut):
+    """Post-warmup aggregation of the three views.
+
+    Units: bandwidths GB/s; latencies ns.  View ① (simulator) counts
+    time in DRAM ticks x ``dram_ps_per_clk``; view ② (interface) in
+    CPU-perceived picoseconds across the clock-domain crossing; view ③
+    (application) in CPU cycles x ``cpu_ps_per_clk`` of bound-phase
+    load-to-use latency.
+    """
     # aggregate post-warmup
     keep = jnp.arange(cfg.windows) >= cfg.warmup
     def ksum(x):

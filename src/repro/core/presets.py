@@ -1,0 +1,135 @@
+"""Memory-device preset registry: DDR4-2666, DDR5-4800, HBM2e.
+
+The paper validates one platform (Skylake + DDR4-2666).  "Cleaning up
+the Mess" shows that fidelity results do **not** transfer across device
+generations without re-validation, and the Mess methodology is defined
+per memory technology as a family of bandwidth-latency curves — so the
+reproduction carries one `DramParams` instance per technology, each
+with its own reference curves (`repro.core.reference`) and per-app
+runtime anchors (`repro.traces.anchors`).
+
+Presets (geometry / clock / protocol deltas):
+
+* ``ddr4_2666`` — the paper's platform: 6 channels x 2 ranks x 16
+  banks (4 bank groups), 64-bit bus, tCK = 750 ps, all-bank refresh.
+  This is byte-identical to ``DramParams()`` so every PR-1 result is
+  unchanged.
+* ``ddr5_4800`` — 6 DIMMs as **12 independent 32-bit sub-channels**
+  (JEDEC DDR5 splits each DIMM in two), 2 ranks x 32 banks (8 bank
+  groups x 4), BL16 (8 bus cycles / 64 B line), tCK ~ 417 ps, and
+  **same-bank refresh** (REFsb: one bank per rank blocked for tRFCsb,
+  rotating, instead of the whole rank for tRFC).  The tCCD_L/tCCD_S
+  split widens to 16/8 per JEDEC DDR5-4800.
+* ``hbm2e`` — one 8-channel HBM2e stack as **16 pseudo-channels**
+  (8 x 2), 1 rank x 16 banks (4 bank groups), 64-bit pseudo-channel
+  bus, narrow BL8 bursts (4 bus cycles), tCK = 625 ps, many-channel /
+  low-per-channel-bandwidth geometry.
+
+All timing fields are bus cycles of the preset's own tCK (see
+`DramParams`); tCK values are integer picoseconds because the paper's
+picosecond clocking (Listing 1b) advances integer ps counters — the
+0.08% rounding of DDR5's 416.67 ps to 417 ps is documented here and
+absorbed by the preset's reference anchors.
+
+The CPU side of the platform (24-core Skylake frontend) is held fixed
+across presets: the sweep isolates the *memory device*, not the core.
+"""
+from __future__ import annotations
+
+from repro.core.timing import CpuParams, DramParams, PlatformParams
+
+#: The paper's device — identical to ``DramParams()`` (asserted in tests).
+DDR4_2666 = DramParams()
+
+#: JEDEC DDR5-4800B (40-39-39), 16 Gb devices, modeled per sub-channel.
+DDR5_4800 = DramParams(
+    n_channels=12,            # 6 DIMMs x 2 independent sub-channels
+    ranks_per_channel=2,
+    banks_per_rank=32,        # 8 bank groups x 4 banks
+    bank_groups=8,
+    rows_per_bank=1 << 16,
+    cols_per_row=512,         # 4 KB row per sub-channel (64 lines)
+    bus_bytes=4,              # 32-bit sub-channel
+    dram_ps_per_clk=417,      # 416.67 ps rounded (documented above)
+    mt_per_s=4800,
+    same_bank_refresh=True,
+    tCL=40, tRCD=39, tRP=39, tRAS=76,
+    tBL=8,                    # BL16 on the 32-bit bus -> 64 B line
+    tCCD_S=8, tCCD_L=16,      # JEDEC DDR5 split (8 tCK / max(8tCK, 5ns))
+    tWR=72,                   # 30 ns
+    tWTR_S=12, tWTR_L=24,     # 5 / 10 ns
+    tRTP=18,                  # 7.5 ns
+    tRRD_S=8, tRRD_L=12,
+    tFAW=32,
+    tCWL=38,
+    tRTRS=2,
+    tREFI=292,                # REFsb cadence: 3.9 us / 32 banks ~ 122 ns
+    tRFC=312,                 # tRFCsb = 130 ns (16 Gb)
+)
+
+#: One HBM2e stack at 3.2 Gbps/pin, modeled per pseudo-channel.
+HBM2E = DramParams(
+    n_channels=16,            # 8 legacy channels x 2 pseudo-channels
+    ranks_per_channel=1,
+    banks_per_rank=16,        # 4 bank groups x 4 banks
+    bank_groups=4,
+    rows_per_bank=1 << 16,
+    cols_per_row=256,         # 2 KB row per pseudo-channel (32 lines)
+    bus_bytes=8,              # 64-bit pseudo-channel
+    dram_ps_per_clk=625,      # 1.6 GHz clock, 3.2 GT/s
+    mt_per_s=3200,
+    same_bank_refresh=False,
+    tCL=23, tRCD=23, tRP=23, tRAS=53,   # ~14.3 / 14.3 / 14.3 / 33 ns
+    tBL=4,                    # BL8 on the 64-bit bus -> 64 B line
+    tCCD_S=2, tCCD_L=4,
+    tWR=26,                   # 16 ns
+    tWTR_S=6, tWTR_L=13,
+    tRTP=6,
+    tRRD_S=6, tRRD_L=7,
+    tFAW=26,                  # 16 ns
+    tCWL=7,
+    tRTRS=0,                  # single rank: no rank switch
+    tREFI=6240,               # 3.9 us
+    tRFC=416,                 # 260 ns
+)
+
+PRESETS: dict[str, DramParams] = {
+    "ddr4_2666": DDR4_2666,
+    "ddr5_4800": DDR5_4800,
+    "hbm2e": HBM2E,
+}
+
+PRESET_ORDER = tuple(PRESETS)
+
+
+def get_preset(name: str) -> DramParams:
+    """Fetch a device preset by name.
+
+    Args:
+        name: one of ``"ddr4_2666"``, ``"ddr5_4800"``, ``"hbm2e"``.
+    Returns:
+        The frozen `DramParams` instance (shared, not a copy).
+    """
+    try:
+        return PRESETS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown device preset {name!r}; one of {list(PRESETS)}"
+        ) from None
+
+
+def platform_for(preset: str, cpu: CpuParams | None = None) -> PlatformParams:
+    """The paper's Skylake CPU frontend attached to a device preset."""
+    return PlatformParams(cpu=cpu or CpuParams(), dram=get_preset(preset))
+
+
+def stage_for(stage: str, preset: str = "ddr4_2666", **overrides):
+    """A `StageConfig` of ``stage`` running on device ``preset``.
+
+    Thin alias of ``get_stage(stage, preset=preset, **overrides)``;
+    ``stage_for(s, "ddr4_2666")`` is exactly ``get_stage(s)`` — the
+    default platform *is* the DDR4 preset.
+    """
+    from repro.core.stages import get_stage
+
+    return get_stage(stage, preset=preset, **overrides)

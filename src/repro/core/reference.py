@@ -1,66 +1,125 @@
-"""Measured Intel Skylake (MareNostrum 4) memory curves — the ground truth.
+"""Real-system memory curves per device preset — the ground truth.
 
 The paper validates every simulation stage against Mess measurements of
-the actual server (Fig. 2a).  We encode those measured curves as an
-analytic reference: for each read/write mix, latency as a function of
-used bandwidth.  Anchor points are taken from the paper's text:
+the actual server (Fig. 2a).  The Mess methodology is defined per
+memory technology as a *family* of bandwidth-latency curves (one per
+read/write mix), and "Cleaning up the Mess" shows fidelity does not
+transfer across device generations — so this module carries one curve
+family per `repro.core.presets` device:
 
-  * unloaded load-to-use latency: 89 ns,
-  * saturation between 100 GB/s (write-heavy) and 120 GB/s (100% read),
-  * saturated latency between 240 ns (100% read) and 390 ns (50% read),
-  * a clear light-to-dark gradient from 100%-read to 50%-read curves.
+* ``ddr4_2666`` — the paper's measured Skylake (MareNostrum 4) curves.
+  Anchor points from the paper's text: 89 ns unloaded load-to-use,
+  saturation between 100 GB/s (write-heavy) and 120 GB/s (100% read),
+  saturated latency 240 ns (100% read) to 390 ns (50% read).
+* ``ddr5_4800`` — a DDR5-4800 server socket (Sapphire-Rapids-class,
+  6 DIMMs = 12 sub-channels): ~92 ns unloaded, saturation ~210 GB/s
+  (100% read) to ~170 GB/s (50% read).
+* ``hbm2e`` — one HBM2e stack: ~108 ns unloaded (HBM trades latency
+  for parallelism), device saturation ~250 GB/s per mix *as measured
+  with a driver strong enough to reach it*.  The platform's 24-core
+  frontend offers at most ~198 GB/s, so simulation and validation
+  operate on the low-utilization region of this curve — a reported
+  gap between simulated saturation and these anchors reflects the
+  frontend ceiling, not simulator infidelity (docs/VALIDATION.md).
 
-The shape between the anchors follows the usual closed-system
-bandwidth-latency knee (queueing-delay growth ~ u/(1-u)); Mess curves of
-Skylake-class DDR4 parts have exactly this profile.
+All anchor tables are analytic references in the role of the paper's
+real-hardware column: unloaded latency, per-mix saturation bandwidth
+and saturated latency, with the usual closed-system queueing knee
+(latency growth ~ u^2/(1-u)) between them — the measured shape of
+Mess curves on all three technologies.
+
+Units: bandwidth GB/s, latency ns (load-to-use, application level).
 """
 from __future__ import annotations
 
 import numpy as np
 
-UNLOADED_NS = 89.0
-#: (read_fraction, saturation bandwidth GB/s, saturated latency ns)
-_ANCHORS = {
-    1.00: (120.0, 240.0),
-    0.87: (115.0, 280.0),
-    0.75: (110.0, 320.0),
-    0.62: (105.0, 355.0),
-    0.50: (100.0, 390.0),
+#: per-preset (unloaded latency ns,
+#:             {read_fraction: (saturation GB/s, saturated latency ns)})
+_FAMILIES: dict[str, tuple[float, dict[float, tuple[float, float]]]] = {
+    "ddr4_2666": (89.0, {
+        1.00: (120.0, 240.0),
+        0.87: (115.0, 280.0),
+        0.75: (110.0, 320.0),
+        0.62: (105.0, 355.0),
+        0.50: (100.0, 390.0),
+    }),
+    "ddr5_4800": (92.0, {
+        1.00: (210.0, 175.0),
+        0.87: (200.0, 200.0),
+        0.75: (190.0, 225.0),
+        0.62: (180.0, 250.0),
+        0.50: (170.0, 275.0),
+    }),
+    "hbm2e": (108.0, {
+        1.00: (250.0, 160.0),
+        0.87: (240.0, 175.0),
+        0.75: (231.0, 190.0),
+        0.62: (222.0, 205.0),
+        0.50: (212.0, 220.0),
+    }),
 }
+
+# Backward-compatible DDR4 module-level aliases (paper platform).
+UNLOADED_NS = _FAMILIES["ddr4_2666"][0]
+_ANCHORS = _FAMILIES["ddr4_2666"][1]
 READ_FRACTIONS = tuple(sorted(_ANCHORS, reverse=True))
 
 
-def _interp_anchor(read_frac: float) -> tuple[float, float]:
-    fracs = np.array(sorted(_ANCHORS))
-    bws = np.array([_ANCHORS[f][0] for f in fracs])
-    lats = np.array([_ANCHORS[f][1] for f in fracs])
+def _family(preset: str):
+    try:
+        return _FAMILIES[preset]
+    except KeyError:
+        raise ValueError(f"unknown reference preset {preset!r}; "
+                         f"one of {list(_FAMILIES)}") from None
+
+
+def unloaded_ns(preset: str = "ddr4_2666") -> float:
+    """Unloaded load-to-use latency (ns) of the preset's real system."""
+    return _family(preset)[0]
+
+
+def _interp_anchor(read_frac: float,
+                   preset: str = "ddr4_2666") -> tuple[float, float]:
+    anchors = _family(preset)[1]
+    fracs = np.array(sorted(anchors))
+    bws = np.array([anchors[f][0] for f in fracs])
+    lats = np.array([anchors[f][1] for f in fracs])
     return (float(np.interp(read_frac, fracs, bws)),
             float(np.interp(read_frac, fracs, lats)))
 
 
-def latency_ns(bw_gbs, read_frac: float = 1.0):
-    """Measured-system load-to-use latency (ns) at `bw_gbs` used bandwidth.
+def latency_ns(bw_gbs, read_frac: float = 1.0, preset: str = "ddr4_2666"):
+    """Real-system load-to-use latency (ns) at ``bw_gbs`` used bandwidth.
 
-    Vectorized over `bw_gbs`.  Saturates at the per-mix maximum latency;
-    bandwidth beyond the per-mix saturation point is clamped (the real
-    system cannot exceed it).
+    Args:
+        bw_gbs: used bandwidth in GB/s (vectorized).
+        read_frac: read fraction of the traffic mix, in [0.5, 1.0].
+        preset: device preset name (`repro.core.presets`).
+    Returns:
+        Latency in ns.  Saturates at the per-mix maximum latency;
+        bandwidth beyond the per-mix saturation point is clamped (the
+        real system cannot exceed it).
     """
-    bw_sat, lat_sat = _interp_anchor(read_frac)
+    unloaded = _family(preset)[0]
+    bw_sat, lat_sat = _interp_anchor(read_frac, preset)
     bw = np.minimum(np.asarray(bw_gbs, dtype=np.float64), bw_sat * 0.999)
     u = bw / bw_sat
-    # Queueing knee calibrated so lat(u=0)=UNLOADED and lat(u->1)=lat_sat.
+    # Queueing knee calibrated so lat(u=0)=unloaded and lat(u->1)=lat_sat.
     # lat = unloaded + k * u^2/(1-u), with a cap at lat_sat.
-    k = (lat_sat - UNLOADED_NS) * 0.08
-    lat = UNLOADED_NS + k * (u ** 2) / np.maximum(1.0 - u, 0.02)
+    k = (lat_sat - unloaded) * 0.08
+    lat = unloaded + k * (u ** 2) / np.maximum(1.0 - u, 0.02)
     return np.minimum(lat, lat_sat)
 
 
-def max_bandwidth_gbs(read_frac: float = 1.0) -> float:
-    return _interp_anchor(read_frac)[0]
+def max_bandwidth_gbs(read_frac: float = 1.0,
+                      preset: str = "ddr4_2666") -> float:
+    """Per-mix saturation bandwidth (GB/s) of the preset's real system."""
+    return _interp_anchor(read_frac, preset)[0]
 
 
-def curve(read_frac: float = 1.0, n: int = 64):
+def curve(read_frac: float = 1.0, n: int = 64, preset: str = "ddr4_2666"):
     """(bandwidth GB/s, latency ns) arrays for one measured Mess curve."""
-    bw_sat, _ = _interp_anchor(read_frac)
+    bw_sat, _ = _interp_anchor(read_frac, preset)
     bw = np.linspace(0.0, bw_sat, n)
-    return bw, latency_ns(bw, read_frac)
+    return bw, latency_ns(bw, read_frac, preset)

@@ -1,0 +1,85 @@
+"""Multi-device sharding of the platform's batch axes.
+
+`run_frontend` is one compiled program per static stage configuration;
+its batch axis — Mess pace points or stacked application traces — is
+embarrassingly parallel.  `sharded_vmap` maps that axis across every
+available accelerator with `jax.shard_map` (data-parallel, no
+cross-shard communication) and degenerates to a plain `jax.vmap` on a
+single device, so CPU CI and a TPU pod run the same call sites.
+
+Because the mapped function is elementwise along the batch axis (no
+collectives, no cross-batch reductions), the sharded result is
+**bit-identical** to the single-device vmap result — asserted by
+tests/test_sharding_sweeps.py.
+
+Batch sizes that do not divide the device count are right-padded by
+repeating the last element; `sharded_vmap` slices the padding off the
+outputs, so callers never see it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec
+
+try:                                    # jax >= 0.5 exposes it top-level
+    from jax import shard_map as _shard_map       # type: ignore
+except ImportError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+BATCH_AXIS = "batch"
+
+
+def device_count() -> int:
+    """Devices the sweep axes shard across (1 = plain vmap fallback)."""
+    return jax.device_count()
+
+
+def _pad_batch(tree, pad: int):
+    return jax.tree_util.tree_map(
+        lambda a: jnp.concatenate(
+            [a, jnp.repeat(a[-1:], pad, axis=0)], axis=0),
+        tree)
+
+
+def _unpad_batch(tree, n: int):
+    return jax.tree_util.tree_map(lambda a: a[:n], tree)
+
+
+def sharded_vmap(fn, n_devices: int | None = None):
+    """``vmap(fn)`` over the leading axis, sharded across devices.
+
+    Args:
+        fn: a function of one batched pytree argument; must be
+            elementwise along the leading (batch) axis.
+        n_devices: devices to shard over; defaults to all available.
+            With one device this is exactly ``jax.vmap(fn)`` (no mesh,
+            no padding) — the CPU fallback path.
+    Returns:
+        A jitted function ``batched(tree) -> tree_out`` whose leading
+        output axis matches the input batch length.  Results are
+        bit-identical to the single-device vmap path.
+    """
+    nd = n_devices or device_count()
+    if nd > device_count():
+        raise ValueError(f"n_devices={nd} exceeds the "
+                         f"{device_count()} available devices")
+    if nd <= 1:
+        return jax.jit(jax.vmap(fn))
+
+    mesh = Mesh(jax.devices()[:nd], (BATCH_AXIS,))
+    spec = PartitionSpec(BATCH_AXIS)
+    mapped = _shard_map(jax.vmap(fn), mesh=mesh,
+                        in_specs=spec, out_specs=spec)
+    jitted = jax.jit(mapped)
+
+    @functools.wraps(fn)
+    def batched(tree):
+        n = jax.tree_util.tree_leaves(tree)[0].shape[0]
+        pad = (-n) % nd
+        out = jitted(_pad_batch(tree, pad) if pad else tree)
+        return _unpad_batch(out, n) if pad else out
+
+    return batched

@@ -58,11 +58,26 @@ STAGES: dict[str, StageConfig] = {
 STAGE_ORDER = tuple(STAGES)
 
 
-def get_stage(name: str, **overrides) -> StageConfig:
-    """Fetch a stage config, optionally overriding run-length knobs."""
+def get_stage(name: str, preset: str | None = None,
+              **overrides) -> StageConfig:
+    """Fetch a stage config, optionally overriding run-length knobs.
+
+    Args:
+        name: stage id (``"01-baseline"`` .. ``"10-delay-buffer"``).
+        preset: optional memory-device preset (`repro.core.presets`);
+            swaps the platform's `DramParams` while keeping the Skylake
+            CPU frontend.  ``None`` / ``"ddr4_2666"`` keep the paper's
+            device exactly.
+        **overrides: any `StageConfig` field (``windows=32, warmup=8``).
+    """
     try:
         cfg = STAGES[name]
     except KeyError:
         raise ValueError(
             f"unknown stage {name!r}; one of {list(STAGES)}") from None
+    if preset is not None and preset != "ddr4_2666":
+        from repro.core.presets import get_preset
+        plat = overrides.get("platform", cfg.platform)
+        overrides["platform"] = dataclasses.replace(
+            plat, dram=get_preset(preset))
     return dataclasses.replace(cfg, **overrides) if overrides else cfg

@@ -38,10 +38,27 @@ class CpuParams:
 
 @dataclasses.dataclass(frozen=True)
 class DramParams:
-    """DDR4-2666 timing set (memory bus cycles, tCK = 750 ps).
+    """One memory device's geometry + timing set.
 
-    Values follow JEDEC DDR4-2666U (19-19-19) as configured in
-    Ramulator for the paper's platform.
+    The **default values are JEDEC DDR4-2666U (19-19-19)** as configured
+    in Ramulator for the paper's platform; the preset registry
+    (`repro.core.presets`) builds DDR5-4800 and HBM2e instances of the
+    same dataclass.  Conventions (easy to get wrong — read this):
+
+    * All ``t*`` timing fields are **memory bus cycles** (``tCK``),
+      never nanoseconds.  One bus cycle is ``dram_ps_per_clk``
+      picoseconds (750 ps for DDR4-2666).
+    * ``mt_per_s`` is the data rate in mega-transfers/s — **two**
+      transfers per bus cycle (DDR), so
+      ``mt_per_s == 2e6 / dram_ps_per_clk`` up to integer rounding.
+    * A *channel* here is an independently scheduled command/data
+      interface: a DDR4 channel, a DDR5 **sub-channel**, or an HBM
+      **pseudo-channel**.  ``bus_bytes`` is its data width (8 B for
+      DDR4/HBM2e pseudo-channel, 4 B for a DDR5 sub-channel).
+    * ``same_bank_refresh`` selects DDR5's REFsb rotation: each refresh
+      blocks only one bank per rank for ``tRFC`` (= tRFCsb), every
+      ``tREFI`` (= per-bank tREFI / banks_per_rank) ticks, instead of
+      closing the whole rank.
     """
 
     n_channels: int = 6
@@ -51,10 +68,12 @@ class DramParams:
     rows_per_bank: int = 1 << 17
     cols_per_row: int = 1 << 10        # 1024 columns x 8B = 8KB row
     line_bytes: int = 64
+    bus_bytes: int = 8                 # channel data-bus width
     dram_ps_per_clk: int = 750         # 1 / 1.333 GHz, as in the paper
     mt_per_s: int = 2666
+    same_bank_refresh: bool = False    # DDR5 REFsb rotation
 
-    # Core timings (cycles @ 750 ps)
+    # Core timings (bus cycles @ dram_ps_per_clk)
     tCL: int = 19
     tRCD: int = 19
     tRP: int = 19
@@ -80,12 +99,21 @@ class DramParams:
 
     @property
     def peak_gbs(self) -> float:
-        """Theoretical peak bandwidth: channels x 8 B x MT/s."""
-        return self.n_channels * 8 * self.mt_per_s * 1e6 / 1e9
+        """Theoretical peak bandwidth: channels x bus width x MT/s."""
+        return self.n_channels * self.bus_bytes * self.mt_per_s * 1e6 / 1e9
 
     @property
     def banks_per_channel(self) -> int:
         return self.ranks_per_channel * self.banks_per_rank
+
+    @property
+    def banks_per_group(self) -> int:
+        return self.banks_per_rank // self.bank_groups
+
+    @property
+    def lines_per_row(self) -> int:
+        """Cache lines per DRAM row (row-buffer reach of the open page)."""
+        return self.cols_per_row * 8 // self.line_bytes
 
 
 @dataclasses.dataclass(frozen=True)

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 
 from repro.core import addrmap
 from repro.core.dram import QueueState
+from repro.core.timing import DramParams
 
 N_CORES = 24
 N_TRAFFIC = 23
@@ -58,12 +59,20 @@ MSHR_CAP = 24
 
 @dataclasses.dataclass(frozen=True)
 class WorkloadConfig:
+    """Bound-phase knobs shared by every frontend.
+
+    ``cache_path_cycles`` / ``noc_*_cycles`` are CPU cycles; ``dram``
+    carries the device geometry the injected addresses decode against
+    (the DDR4-2666 default or any `repro.core.presets` device).
+    """
+
     mapping: str = "simple"
     prefetch: bool = False
     pf_shift: int = 2          # extra pf traffic = quota >> pf_shift (25%)
     cache_path_cycles: int = 50
     noc_req_cycles: int = 0    # extra request-path NOC cycles (stage 06)
     noc_resp_cycles: int = 0
+    dram: DramParams = dataclasses.field(default_factory=DramParams)
 
 
 class CoreState(NamedTuple):
@@ -227,7 +236,7 @@ def inject_queue(queue: QueueState, cand: Candidates, clock, w,
     flat = jax.tree_util.tree_map(lambda a: a.reshape(n), cand)
     core_of = jnp.repeat(jnp.arange(N_CORES, dtype=jnp.int32), CAND)
 
-    dec = addrmap.decode(flat.line, cfg.mapping)
+    dec = addrmap.decode(flat.line, cfg.mapping, dram=cfg.dram)
     ch = jnp.where(flat.valid, dec.channel, C)        # invalid -> ch C
     # admission key: chase first, then issue order, then core id
     key = ((1 - flat.is_chase.astype(jnp.int32)) * (1 << 24)
@@ -264,7 +273,7 @@ def inject_queue(queue: QueueState, cand: Candidates, clock, w,
         is_write=put(queue.is_write, flat.is_write[order].astype(jnp.int32)),
         arrival=put(queue.arrival, arrival_tick.astype(jnp.int32)),
         issue_cycle=put(queue.issue_cycle, issue_abs.astype(jnp.int32)),
-        fbank=put(queue.fbank, dec.flat_bank[order]),
+        fbank=put(queue.fbank, dec.flat_bank_for(cfg.dram)[order]),
         row=put(queue.row, dec.row[order]),
         is_chase=put(queue.is_chase, flat.is_chase[order].astype(jnp.int32)),
         core=put(queue.core, core_of[order]),

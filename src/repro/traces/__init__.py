@@ -5,19 +5,20 @@ Public API:
 * `Trace`, `make_trace`, `stack_traces` — compact JAX-native traces.
 * `KERNELS`, `make_suite`               — DAMOV-style app generators.
 * `TraceFrontend`                       — bound-phase replay frontend.
-* `replay_suite`, `replay_stages`       — batched (vmap) replay engine.
-* `anchor_runtime_ms`, `mape`           — real-system runtime anchors.
+* `replay_suite`, `replay_stages`       — device-sharded replay engine.
+* `replay_grid`                         — preset x stage x app grid.
+* `anchor_runtime_ms`, `mape`           — per-preset runtime anchors.
 """
 from repro.traces.anchors import anchor_runtime_ms, anchor_suite_ms, mape
 from repro.traces.frontend import TraceFrontend, TraceState
 from repro.traces.kernels import KERNELS, make_suite
-from repro.traces.replay import replay_stages, replay_suite
+from repro.traces.replay import replay_grid, replay_stages, replay_suite
 from repro.traces.trace import Trace, make_trace, stack_traces, trace_stats
 
 __all__ = [
     "Trace", "make_trace", "stack_traces", "trace_stats",
     "KERNELS", "make_suite",
     "TraceFrontend", "TraceState",
-    "replay_suite", "replay_stages",
+    "replay_suite", "replay_stages", "replay_grid",
     "anchor_runtime_ms", "anchor_suite_ms", "mape",
 ]

@@ -2,39 +2,60 @@
 
 The paper validates simulators against the measured machine; for the
 application perspective that means per-application runtime on the real
-Skylake server.  We derive analytic anchors from the measured Mess
-curves in `repro.core.reference` with a small closed-system model:
+server.  We derive analytic anchors from the per-preset measured Mess
+curve families in `repro.core.reference` with a small closed-system
+model:
 
 * dependent accesses serialize at the measured load-to-use latency
   (a pointer chase runs at exactly one access per latency);
 * independent accesses stream at the Little's-law rate of `MSHR_CAP`
-  outstanding lines per core, capped by the machine's per-mix maximum
-  bandwidth share;
+  outstanding lines per core, capped by (a) the machine's per-mix
+  maximum bandwidth share and (b) the frontend issue ceiling — a core
+  retires at most `CAP_DEMAND` demands per 1000-cycle window, the same
+  bound the platform's bound phase enforces (on fast devices such as
+  HBM2e this frontend bound, not the memory device, is the limiter —
+  exactly as on real single-socket hardware);
 * latency and bandwidth are solved as a fixed point (more traffic ->
   higher latency -> fewer outstanding-lines per second).
 
 These anchors are *references*, not measurements — they inherit the
-anchor points the paper reports (89 ns unloaded, 120 GB/s saturation)
-and serve as the ground truth for the benchmark's MAPE, playing the
-role of the paper's real-hardware column.
+per-preset anchor points (e.g. 89 ns unloaded / 120 GB/s saturation
+for the paper's DDR4-2666 Skylake) and serve as the ground truth for
+the benchmark's MAPE, playing the role of the paper's real-hardware
+column.  Adding a new device preset means adding its curve family to
+`repro.core.reference._FAMILIES`; this module picks it up by name
+(see docs/VALIDATION.md for the full recipe).
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core import reference
-from repro.core.workload import MSHR_CAP, N_TRAFFIC
-from repro.traces.trace import Trace, trace_stats
+from repro.core.timing import CpuParams
+from repro.core.workload import CAP_DEMAND, MSHR_CAP, N_TRAFFIC
 
 LINE_BYTES = 64
 
+_CPU = CpuParams()
+#: frontend issue ceiling: lines / ns / core the bound phase can retire
+_WINDOW_RATE = CAP_DEMAND / (_CPU.window_cycles * _CPU.cpu_ps_per_clk * 1e-3)
 
-def anchor_runtime_ms(trace: Trace, iters: int = 8) -> float:
+
+def anchor_runtime_ms(trace, preset: str = "ddr4_2666",
+                      iters: int = 8) -> float:
     """Analytic real-system runtime of one (unbatched) trace, in ms.
 
-    The trace is sharded across `N_TRAFFIC` cores exactly as the replay
-    frontend does, so anchor and prediction describe the same execution.
+    Args:
+        trace: an unbatched `repro.traces.Trace`.
+        preset: device preset whose reference curves anchor the model.
+        iters: fixed-point iterations (converges in a handful).
+    Returns:
+        Runtime in milliseconds.  The trace is sharded across
+        `N_TRAFFIC` cores exactly as the replay frontend does, so
+        anchor and prediction describe the same execution.
     """
+    from repro.traces.trace import trace_stats
+
     st = trace_stats(trace)
     n = st["accesses"]
     if n == 0:
@@ -46,20 +67,21 @@ def anchor_runtime_ms(trace: Trace, iters: int = 8) -> float:
     bw = 1.0                                   # GB/s, fixed-point seed
     t_ns = 1.0
     for _ in range(iters):
-        lat = float(reference.latency_ns(bw, read_frac))
+        lat = float(reference.latency_ns(bw, read_frac, preset))
         # per-core independent service rate (lines/ns), Little's law
         rate_core = MSHR_CAP / lat
-        bw_cap = reference.max_bandwidth_gbs(read_frac)
+        bw_cap = reference.max_bandwidth_gbs(read_frac, preset)
         rate_cap = bw_cap / (N_TRAFFIC * LINE_BYTES)   # GB/s -> lines/ns/core
-        rate = min(rate_core, rate_cap)
+        rate = min(rate_core, rate_cap, _WINDOW_RATE)
         # every core replays the full stream against its own shard
         t_ns = n_dep * lat + n_ind / rate
         bw = N_TRAFFIC * n * LINE_BYTES / t_ns         # bytes/ns = GB/s
     return t_ns * 1e-6
 
 
-def anchor_suite_ms(traces: list[Trace]) -> np.ndarray:
-    return np.asarray([anchor_runtime_ms(t) for t in traces])
+def anchor_suite_ms(traces, preset: str = "ddr4_2666") -> np.ndarray:
+    """Per-trace `anchor_runtime_ms` over a list of traces (ms array)."""
+    return np.asarray([anchor_runtime_ms(t, preset) for t in traces])
 
 
 def mape(predicted_ms, anchor_ms) -> float:

@@ -63,11 +63,26 @@ class TraceFrontend:
         self.cfg = cfg
 
     def init_state(self) -> TraceState:
+        """Fresh replay cursor at the head of the trace (all zeros)."""
         z = jnp.zeros((), jnp.int32)
         return TraceState(pos=z, line_cum=z, carry=z,
                           chase_seq=z, chase_carry=z)
 
     def bound(self, state: TraceState, l_ir_cycles, budget, window_cycles):
+        """One window's bound phase: price + emit the next trace slice.
+
+        Args:
+            state: replay cursor (`TraceState`).
+            l_ir_cycles: current immediate-response latency, CPU cycles
+                (int32, traced; PI-controlled after stage 04).
+            budget: per-core MSHR closed-loop demand budget for this
+                window (requests, from `workload.littles_law_budget`).
+            window_cycles: ZSim window length in CPU cycles (static).
+        Returns:
+            ``(Candidates, aux)`` — the (24, CAND) candidate requests
+            (issue cycles are CPU cycles within the window) and the
+            bookkeeping dict `update` folds into the next state.
+        """
         tr = self.trace
         cid = jnp.arange(N_CORES, dtype=jnp.int32)[:, None]     # (24,1)
         j = jnp.arange(CAND, dtype=jnp.int32)[None, :]          # (1,CAND)
@@ -144,6 +159,12 @@ class TraceFrontend:
         return cand, aux
 
     def update(self, state: TraceState, aux, acc_demand) -> TraceState:
+        """Advance the cursor past the accesses consumed this window.
+
+        ``acc_demand`` (per-core accepted demand counts) is unused:
+        rejected demand is dropped (see module doc) so the cursor moves
+        by the bound-phase take, not the queue-accept count.
+        """
         del acc_demand   # rejected demand is dropped (see module doc)
         return TraceState(
             pos=state.pos + aux["n_take"],
@@ -154,4 +175,7 @@ class TraceFrontend:
         )
 
     def progress(self, state: TraceState):
+        """Monotone trace position (accesses consumed); the replay
+        engine compares it against ``trace.length`` to find the
+        completion window."""
         return state.pos

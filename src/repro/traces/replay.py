@@ -1,11 +1,15 @@
-"""Batched multi-application replay engine.
+"""Batched multi-application replay engine (device-sharded).
 
 One compiled program replays a whole application suite: the stacked
-`Trace` batch vmaps over `platform.run_frontend`, so N applications
-share a single XLA compile per stage (the same pattern `mess.sweep`
-uses for pace points).  Stages iterate in Python because they differ in
-*static* configuration (clock model, scheduler policy), which changes
-program shapes.
+`Trace` batch maps over `platform.run_frontend`, with the application
+axis sharded across every available device by
+`repro.core.shard.sharded_vmap` (bit-identical plain-vmap fallback on
+one device), so N applications share a single XLA compile per stage —
+the same pattern `mess.sweep` uses for pace points.  Stages and device
+presets iterate in Python because they differ in *static*
+configuration (clock model, scheduler policy, channel/bank geometry),
+which changes program shapes; `replay_grid` wraps that iteration so a
+full (preset x stage x app) scenario grid is one invocation.
 
 Outputs per application:
 
@@ -20,10 +24,10 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.platform import StageConfig, run_frontend
+from repro.core.shard import sharded_vmap
 from repro.traces.frontend import TraceFrontend
 from repro.traces.trace import Trace
 
@@ -34,7 +38,7 @@ VIEW_KEYS = ("sim_bw_gbs", "sim_lat_ns", "if_bw_gbs", "if_lat_ns",
 
 @functools.lru_cache(maxsize=None)
 def _replay_fn(cfg: StageConfig):
-    """One jit(vmap) program: the app axis is the batch axis."""
+    """One compiled program: the app axis is the sharded batch axis."""
 
     def one(trace: Trace):
         views, outs = run_frontend(cfg, TraceFrontend(
@@ -42,15 +46,20 @@ def _replay_fn(cfg: StageConfig):
         return dict({k: views[k] for k in VIEW_KEYS},
                     progress=outs.progress)
 
-    return jax.jit(jax.vmap(one))
+    return sharded_vmap(one)
 
 
 def replay_suite(cfg: StageConfig, traces: Trace) -> dict:
     """Replay a stacked trace batch through one stage; host-side dict.
 
-    ``traces`` carries a leading application axis (see `stack_traces`).
-    Returns numpy arrays keyed by `VIEW_KEYS` plus ``runtime_ms`` /
-    ``runtime_windows`` / ``done`` per application.
+    Args:
+        cfg: the stage configuration (clock model, policy, platform).
+        traces: a `Trace` with a leading application axis
+            (see `stack_traces`); the axis is sharded across devices.
+    Returns:
+        Numpy arrays keyed by `VIEW_KEYS` (bandwidth GB/s, latency ns)
+        plus ``runtime_ms`` / ``runtime_windows`` / ``done`` /
+        ``progress_final`` per application.
     """
     out = jax.device_get(_replay_fn(cfg)(traces))
     progress = out.pop("progress")                   # (A, W)
@@ -75,18 +84,45 @@ def replay_suite(cfg: StageConfig, traces: Trace) -> dict:
     return out
 
 
-def replay_stages(stages, traces: Trace, **overrides) -> dict:
+def replay_stages(stages, traces: Trace, preset: str | None = None,
+                  **overrides) -> dict:
     """Replay one trace batch across several stages.
 
-    ``stages`` is an iterable of stage names or `StageConfig`s; returns
-    ``{stage_name: replay_suite(...)}``.  Window-count overrides apply
-    to every stage (CI-speed vs full runs).
+    Args:
+        stages: iterable of stage names or `StageConfig`s.
+        traces: stacked `Trace` batch (leading application axis).
+        preset: optional device preset applied to every named stage.
+        **overrides: `StageConfig` field overrides applied to every
+            named stage (window-count knobs for CI-speed vs full runs).
+    Returns:
+        ``{stage_name: replay_suite(...)}``.
     """
     from repro.core import get_stage
 
     results = {}
     for st in stages:
         cfg = st if isinstance(st, StageConfig) else get_stage(
-            st, **overrides)
+            st, preset=preset, **overrides)
         results[cfg.name] = replay_suite(cfg, traces)
     return results
+
+
+def replay_grid(presets, stages, traces: Trace, **overrides) -> dict:
+    """One fleet-scale scenario grid: preset x stage x application.
+
+    Every (preset, stage) cell is one compiled program whose
+    application axis is sharded across all devices; presets and stages
+    iterate in Python because they change static shapes (channel/bank
+    geometry, clock ratios, scheduler policy).  One call covers the
+    whole grid.
+
+    Args:
+        presets: iterable of device preset names (`repro.core.presets`).
+        stages: iterable of stage names.
+        traces: stacked `Trace` batch shared by every cell.
+        **overrides: `StageConfig` overrides applied to every cell.
+    Returns:
+        ``{preset: {stage: replay_suite(...)}}``.
+    """
+    return {p: replay_stages(stages, traces, preset=p, **overrides)
+            for p in presets}

@@ -1,0 +1,44 @@
+"""Docs stay true: doctests run, cross-references resolve."""
+import doctest
+import importlib.util
+import os
+import sys
+
+ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _load_check_docs():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs", os.path.join(ROOT, "scripts", "check_docs.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_docs_doctests_pass():
+    for name in ("ARCHITECTURE.md", "VALIDATION.md"):
+        path = os.path.join(ROOT, "docs", name)
+        res = doctest.testfile(path, module_relative=False, verbose=False)
+        assert res.failed == 0, f"{name}: {res.failed} doctest failures"
+
+
+def test_docs_cross_references_resolve(capsys):
+    mod = _load_check_docs()
+    assert mod.main() == 0, capsys.readouterr().out
+
+
+def test_checker_catches_broken_references():
+    mod = _load_check_docs()
+    mod._errors.clear()
+    mod.check_modules("fake.md", "see repro.core.not_a_module_xyz")
+    mod.check_paths("fake.md", "see src/repro/core/nope_missing.py")
+    mod.check_links("fake.md", "[x](does/not/exist.md)")
+    assert len(mod._errors) == 3
+    mod._errors.clear()
+
+
+def test_readme_links_docs():
+    with open(os.path.join(ROOT, "README.md")) as f:
+        readme = f.read()
+    assert "docs/ARCHITECTURE.md" in readme
+    assert "docs/VALIDATION.md" in readme

@@ -1,0 +1,173 @@
+"""Device preset registry: geometry, timing legality, per-preset runs."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PRESETS, get_preset, get_stage, platform_for, stage_for
+from repro.core import addrmap, dram, reference
+from repro.core.dram import SchedulerPolicy
+from repro.core.stages import STAGES
+from repro.core.timing import DramParams
+
+
+def test_ddr4_preset_is_the_default_params():
+    """PR-1 results depend on this: the DDR4 preset IS DramParams()."""
+    assert get_preset("ddr4_2666") == DramParams()
+
+
+def test_unknown_preset_raises_with_catalog():
+    with pytest.raises(ValueError, match="unknown device preset"):
+        get_preset("gddr6")
+    with pytest.raises(ValueError, match="ddr5_4800"):
+        get_preset("nope")
+
+
+@pytest.mark.parametrize("name", list(PRESETS))
+def test_preset_geometry_is_consistent(name):
+    d = get_preset(name)
+    assert d.banks_per_rank % d.bank_groups == 0
+    assert d.banks_per_group >= 1
+    assert d.lines_per_row >= 16
+    assert d.tRC == d.tRAS + d.tRP
+    # data rate consistent with the clock (DDR: 2 transfers/cycle),
+    # within the integer-picosecond rounding documented in presets.py
+    assert d.mt_per_s * d.dram_ps_per_clk == pytest.approx(2e6, rel=0.005)
+
+
+def test_preset_peak_bandwidths():
+    assert get_preset("ddr4_2666").peak_gbs == pytest.approx(128.0, rel=0.01)
+    assert get_preset("ddr5_4800").peak_gbs == pytest.approx(230.4, rel=0.01)
+    assert get_preset("hbm2e").peak_gbs == pytest.approx(409.6, rel=0.01)
+
+
+def test_reference_family_per_preset():
+    for name in PRESETS:
+        bw, lat = reference.curve(1.0, n=16, preset=name)
+        assert lat[0] == pytest.approx(reference.unloaded_ns(name), rel=0.01)
+        assert (np.diff(lat) >= -1e-9).all()          # monotone knee
+    # HBM trades latency for parallelism: higher unloaded, more headroom
+    assert (reference.unloaded_ns("hbm2e")
+            > reference.unloaded_ns("ddr4_2666"))
+    assert (reference.max_bandwidth_gbs(1.0, "hbm2e")
+            > reference.max_bandwidth_gbs(1.0, "ddr5_4800")
+            > reference.max_bandwidth_gbs(1.0, "ddr4_2666"))
+
+
+@pytest.mark.parametrize("name", list(PRESETS))
+@pytest.mark.parametrize("mapping", ["simple", "skylake_xor"])
+def test_addrmap_fields_in_range_all_presets(name, mapping):
+    d = get_preset(name)
+    lines = jnp.arange(50000, dtype=jnp.uint32) * 977
+    dec = addrmap.decode(lines, mapping, dram=d)
+    assert addrmap.check_fields(dec, d)
+    fb = np.asarray(dec.flat_bank_for(d))
+    assert (fb >= 0).all() and (fb < d.banks_per_channel).all()
+    # channel spread stays uniform-ish on every geometry
+    counts = np.bincount(np.asarray(dec.channel), minlength=d.n_channels)
+    assert counts.min() > 0.5 * counts.mean()
+
+
+def test_skylake_xor_falls_back_generic_off_ddr4_geometry():
+    lines = jnp.arange(4096, dtype=jnp.uint32)
+    ddr4 = addrmap.decode(lines, "skylake_xor", dram=get_preset("ddr4_2666"))
+    ddr4_none = addrmap.decode(lines, "skylake_xor")
+    for f in ddr4._fields:
+        assert (np.asarray(getattr(ddr4, f))
+                == np.asarray(getattr(ddr4_none, f))).all()
+    hbm = addrmap.decode(lines, "skylake_xor", dram=get_preset("hbm2e"))
+    assert addrmap.check_fields(hbm, get_preset("hbm2e"))
+
+
+def test_stage_for_and_get_stage_preset():
+    cfg = get_stage("04-model-correct", preset="ddr5_4800")
+    assert cfg.platform.dram == get_preset("ddr5_4800")
+    assert cfg.platform.cpu == STAGES["04-model-correct"].platform.cpu
+    # registry untouched; ddr4 request returns the registered config
+    assert STAGES["04-model-correct"].platform.dram == DramParams()
+    assert get_stage("04-model-correct", preset="ddr4_2666") is \
+        STAGES["04-model-correct"]
+    assert stage_for("04-model-correct", "hbm2e").platform.dram == \
+        get_preset("hbm2e")
+    assert platform_for("hbm2e").dram == get_preset("hbm2e")
+
+
+# ------------------------------------------------ same-bank refresh (DDR5)
+
+def _tiny_ddr5(**kw):
+    """A small same-bank-refresh device for direct `dram.tick` driving."""
+    base = dataclasses.asdict(get_preset("ddr5_4800"))
+    base.update(n_channels=1, ranks_per_channel=1, **kw)
+    return DramParams(**base)
+
+
+def test_same_bank_refresh_blocks_only_target_bank():
+    d = _tiny_ddr5(tREFI=5)
+    pol = SchedulerPolicy(queue_depth=8)
+    q = dram.init_queue(d, pol)
+    b = dram.init_banks(d)
+    # open rows everywhere; refresh will fire at t >= tREFI on bank 0
+    b = b._replace(open_row=b.open_row * 0 + 7,
+                   next_ref=b.next_ref * 0 + d.tREFI)
+    for t in range(d.tREFI + 1):
+        q, b, _ = dram.tick(q, b, jnp.int32(t), dram=d, policy=pol,
+                            tick2cpu_num=d.dram_ps_per_clk, tick2cpu_den=1,
+                            cpu_ps_per_clk=476)
+    open_row = np.asarray(b.open_row)[0]
+    # REFsb: bank 0 closed + blocked for tRFCsb, every other bank intact
+    assert open_row[0] == -1
+    assert (open_row[1:] == 7).all()
+    assert int(np.asarray(b.next_act)[0, 0]) >= d.tREFI + d.tRFC
+    assert (np.asarray(b.next_act)[0, 1:] < d.tREFI).all()
+    # the rotation advanced to bank 1
+    assert int(np.asarray(b.ref_slot)[0, 0]) == 1
+
+
+def test_all_bank_refresh_unchanged_on_ddr4():
+    d = DramParams()
+    pol = SchedulerPolicy(queue_depth=8)
+    q = dram.init_queue(d, pol)
+    b0 = dram.init_banks(d)
+    b = b0._replace(open_row=b0.open_row * 0 + 3,
+                    next_ref=b0.next_ref * 0 + 2)
+    for t in range(3):
+        q, b, _ = dram.tick(q, b, jnp.int32(t), dram=d, policy=pol,
+                            tick2cpu_num=750, tick2cpu_den=1,
+                            cpu_ps_per_clk=476)
+    # rank 0 of every channel fully closed (all-bank refresh)
+    assert (np.asarray(b.open_row)[:, :d.banks_per_rank] == -1).all()
+    assert (np.asarray(b.ref_slot) == 0).all()
+
+
+# ------------------------------------------------------- end-to-end smoke
+
+def test_replay_grid_covers_preset_stage_app():
+    """One invocation -> the full preset x stage x app scenario grid."""
+    import numpy as np
+    from repro.traces import make_suite, replay_grid, stack_traces
+
+    _, traces = make_suite(n=256, names=("stream", "pointer_chase"))
+    grid = replay_grid(("ddr4_2666", "hbm2e"), ("03-ps-clock",),
+                       stack_traces(traces), windows=8, warmup=2)
+    assert set(grid) == {"ddr4_2666", "hbm2e"}
+    for preset, stages in grid.items():
+        out = stages["03-ps-clock"]
+        assert out["runtime_ms"].shape == (2,)
+        assert np.isfinite(out["runtime_ms"]).all()
+        assert (out["n_rd"] > 0).all(), preset
+
+
+def test_run_point_on_ddr5_preset():
+    import jax
+    from repro.core import run_point
+
+    cfg = get_stage("03-ps-clock", preset="ddr5_4800", windows=12, warmup=4)
+    out = jax.jit(lambda p, w: run_point(cfg, p, w))(
+        jnp.int32(24), jnp.int32(0))
+    out = {k: float(v) for k, v in out.items()}
+    assert out["n_rd"] > 0
+    assert out["sim_bw_gbs"] > 10.0
+    # picosecond clocking holds on the new device's clock ratio too
+    assert out["if_bw_gbs"] / out["sim_bw_gbs"] == pytest.approx(1.0,
+                                                                 rel=1e-3)

@@ -1,0 +1,74 @@
+"""Device-sharded sweep axes: bit-identical to the single-device path."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.shard import sharded_vmap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_single_device_fallback_is_plain_vmap():
+    f = sharded_vmap(lambda x: x * 2 + 1, n_devices=1)
+    x = jnp.arange(7, dtype=jnp.int32)
+    assert (np.asarray(f(x)) == np.asarray(jax.vmap(
+        lambda x: x * 2 + 1)(x))).all()
+
+
+def test_pytree_batch_and_dict_output():
+    f = sharded_vmap(lambda t: dict(s=t[0] + t[1], d=t[0] - t[1]))
+    a = jnp.arange(5.0)
+    out = f((a, a * 3))
+    assert (np.asarray(out["s"]) == np.asarray(a * 4)).all()
+    assert out["d"].shape == (5,)
+
+
+_SHARD_SCRIPT = textwrap.dedent("""
+    import jax, jax.numpy as jnp, numpy as np
+    assert jax.device_count() == 4, jax.devices()
+    from repro.core.platform import run_frontend
+    from repro.core.shard import sharded_vmap
+    from repro.core import get_stage
+    from repro.traces import make_suite, stack_traces
+    from repro.traces.frontend import TraceFrontend
+    from repro.traces.replay import VIEW_KEYS
+
+    cfg = get_stage("03-ps-clock", windows=6, warmup=2)
+    def one(trace):
+        views, outs = run_frontend(cfg, TraceFrontend(
+            trace, cfg.workload_config()))
+        return dict({k: views[k] for k in VIEW_KEYS},
+                    progress=outs.progress)
+
+    # 3 apps on 4 devices: exercises the right-pad + slice path too
+    _, traces = make_suite(n=256, names=("stream", "gups", "pointer_chase"))
+    batch = stack_traces(traces)
+    sharded = jax.device_get(sharded_vmap(one, n_devices=4)(batch))
+    single = jax.device_get(sharded_vmap(one, n_devices=1)(batch))
+    for k in single:
+        a, b = np.asarray(sharded[k]), np.asarray(single[k])
+        assert a.shape == b.shape, k
+        assert (a == b).all(), (k, a, b)     # BIT-identical, not approx
+    print("OK")
+""")
+
+
+def test_shard_map_bit_identical_to_vmap_on_forced_devices():
+    """Acceptance: the shard_map sweep path equals the vmap path bit for
+    bit.  Runs in a subprocess with 4 forced CPU host devices (the
+    device count is fixed at jax import time)."""
+    env = dict(os.environ,
+               XLA_FLAGS=(os.environ.get("XLA_FLAGS", "")
+                          + " --xla_force_host_platform_device_count=4"),
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=SRC + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    proc = subprocess.run([sys.executable, "-c", _SHARD_SCRIPT],
+                          capture_output=True, text=True, env=env,
+                          timeout=600)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "OK" in proc.stdout
