@@ -15,11 +15,22 @@ the interface corrections (stages 03-04) recouple them and the MAPE
 drops monotonically — on every device generation, against that
 generation's own anchors.
 
-CSV: ``reports/benchmarks/app_validation[_<preset>].csv`` with one row
-per (stage, app): runtime, anchor, error, and the three latency views.
+``--mix`` adds the multiprogrammed validation: three named per-core
+trace mixes (`repro.traces.mix`) replayed as one batched compile per
+(preset, stage), reporting each app's *in-mix* runtime and MAPE
+against the joint-fixed-point mix anchors (`anchor_mix_ms`) next to
+its solo runtime — the regime where interface contention actually
+separates the three perspectives.  ``--sockets 2`` runs either mode on
+the two-socket frontend (required to drive hbm2e past the ~200 GB/s
+single-socket ceiling; see docs/VALIDATION.md).
+
+CSV: ``reports/benchmarks/app_validation[_<preset>][_2s].csv`` with one
+row per (stage, app) — and ``app_validation_mix[...]`` with one row per
+(stage, mix, app).
 
 Usage:
     python -m benchmarks.app_validation [--full] [--preset P] [--grid]
+                                        [--mix] [--sockets N]
 """
 from __future__ import annotations
 
@@ -28,8 +39,12 @@ import os
 import time
 
 from benchmarks.util import OUT_DIR, emit, preset_suffix
+from repro.core import get_stage
 from repro.core.presets import PRESET_ORDER
-from repro.traces import (anchor_suite_ms, make_suite, mape, replay_stages,
+from repro.core.workload import N_CORES_PER_SOCKET
+from repro.traces import (anchor_mix_ms, anchor_suite_ms, assign_traces,
+                          make_suite, mape, replay_mixes, replay_stages,
+                          replay_suite, split_cores, stack_mixes,
                           stack_traces)
 
 STAGES = ("01-baseline", "03-ps-clock", "04-model-correct",
@@ -37,11 +52,23 @@ STAGES = ("01-baseline", "03-ps-clock", "04-model-correct",
 FAST = dict(windows=32, warmup=8, n=2048)
 FULL = dict(windows=96, warmup=24, n=8192)
 
+#: named multiprogrammed mixes (kernel names; traffic cores split
+#: evenly across the apps of a mix by `split_cores`)
+MIXES = (
+    ("stream+chase", ("stream", "pointer_chase")),
+    ("stream+gups", ("stream", "gups")),
+    ("bfs+spmv+stencil", ("bfs_frontier", "spmv", "stencil3d")),
+)
+MIX_STAGES = ("01-baseline", "10-delay-buffer")
 
-def _write_csv(rows, preset: str):
+
+def _suffix(preset: str, sockets: int) -> str:
+    return preset_suffix(preset) + ("" if sockets == 1 else f"_{sockets}s")
+
+
+def _write_csv(rows, name: str):
     os.makedirs(OUT_DIR, exist_ok=True)
-    path = os.path.join(OUT_DIR,
-                        f"app_validation{preset_suffix(preset)}.csv")
+    path = os.path.join(OUT_DIR, f"{name}.csv")
     with open(path, "w", newline="") as f:
         w = csv.DictWriter(f, fieldnames=list(rows[0]))
         w.writeheader()
@@ -49,27 +76,30 @@ def _write_csv(rows, preset: str):
     return path
 
 
-def run_preset(preset: str, full: bool = False, stages=STAGES):
+def run_preset(preset: str, full: bool = False, stages=STAGES,
+               sockets: int = 1):
     """Validate one device preset across the stage progression."""
     knobs = FULL if full else FAST
     names, traces = make_suite(n=knobs["n"])
     batch = stack_traces(traces)
-    anchors = anchor_suite_ms(traces, preset)
+    anchors = anchor_suite_ms(traces, preset, n_sockets=sockets)
 
     t0 = time.perf_counter()
     results = replay_stages(stages, batch, preset=preset,
                             windows=knobs["windows"],
-                            warmup=knobs["warmup"])
+                            warmup=knobs["warmup"], n_sockets=sockets)
     wall = time.perf_counter() - t0
     us = wall / (len(stages) * len(names)) * 1e6
 
+    tag = f"app_validation{_suffix(preset, sockets)}"
+    mtag = preset if sockets == 1 else f"{preset}_{sockets}s"
     rows = []
     for stage, out in results.items():
         err = mape(out["runtime_ms"], anchors)
-        emit(f"app_validation.{preset}.{stage}.mape_pct", us, f"{err:.1f}")
+        emit(f"app_validation.{mtag}.{stage}.mape_pct", us, f"{err:.1f}")
         for i, nm in enumerate(names):
             rows.append(dict(
-                preset=preset, stage=stage, app=nm,
+                preset=preset, stage=stage, app=nm, sockets=sockets,
                 runtime_ms=f"{out['runtime_ms'][i]:.5f}",
                 anchor_ms=f"{anchors[i]:.5f}",
                 err_pct=f"{100 * (out['runtime_ms'][i] / anchors[i] - 1):.1f}",
@@ -78,19 +108,91 @@ def run_preset(preset: str, full: bool = False, stages=STAGES):
                 app_lat_ns=f"{out['app_lat_ns'][i]:.1f}",
                 sim_bw_gbs=f"{out['sim_bw_gbs'][i]:.1f}",
             ))
-    _write_csv(rows, preset)
+    _write_csv(rows, tag)
 
     # headline: correction narrative — MAPE of first vs last stage
     first = mape(results[stages[0]]["runtime_ms"], anchors)
     last = mape(results[stages[-1]]["runtime_ms"], anchors)
-    emit(f"app_validation.{preset}.baseline_vs_corrected", us,
+    emit(f"app_validation.{mtag}.baseline_vs_corrected", us,
          f"{first:.1f} -> {last:.1f} (MAPE %, decoupling fixed)")
     return results
 
 
-def main(full: bool = False, preset: str = "ddr4_2666", grid: bool = False):
+def run_mixes(preset: str, full: bool = False, stages=MIX_STAGES,
+              sockets: int = 1):
+    """Multiprogrammed validation: per-app-in-mix runtime MAPE.
+
+    All mixes of `MIXES` are stacked into ONE batched compile per
+    (preset, stage) — the mix axis is the sharded batch axis — and each
+    app's in-mix runtime is reported next to its solo runtime from the
+    same stage.
+    """
+    knobs = FULL if full else FAST
+    n_cores = N_CORES_PER_SOCKET * sockets
+
+    built = []          # (mix_name, app_names, traces, cores_per_app)
+    for mix_name, kernels in MIXES:
+        names, traces = make_suite(n=knobs["n"], names=kernels)
+        asn = split_cores(len(traces), n_cores)
+        cores = [asn.count(a) for a in range(len(traces))]
+        built.append((mix_name, names, traces, cores,
+                      assign_traces(traces, asn)))
+    mix_batch = stack_mixes([b[4] for b in built])
+
+    # solo baselines (one compile per stage, shared by every mix);
+    # only the kernels that actually appear in a mix are replayed
+    used = tuple(dict.fromkeys(k for _, ks in MIXES for k in ks))
+    solo_names, solo_traces = make_suite(n=knobs["n"], names=used)
+    solo_anchor = dict(zip(solo_names, anchor_suite_ms(
+        solo_traces, preset, n_sockets=sockets)))
+
+    mtag = preset if sockets == 1 else f"{preset}_{sockets}s"
+    rows, results = [], {}
+    for stage in stages:
+        cfg = get_stage(stage, preset=preset, windows=knobs["windows"],
+                        warmup=knobs["warmup"], n_sockets=sockets)
+        t0 = time.perf_counter()
+        out = replay_mixes(cfg, mix_batch)
+        solo = replay_suite(cfg, stack_traces(solo_traces))
+        us = (time.perf_counter() - t0) / len(built) * 1e6
+        solo_rt = dict(zip(solo_names, solo["runtime_ms"]))
+        results[stage] = out
+
+        for m, (mix_name, names, traces, cores, _) in enumerate(built):
+            anchors = anchor_mix_ms(traces, cores, preset,
+                                    n_sockets=sockets)
+            pred = out["app_runtime_ms"][m, :len(names)]
+            err = mape(pred, anchors)
+            emit(f"app_mix.{mtag}.{stage}.{mix_name}.mape_pct",
+                 us, f"{err:.1f}")
+            for a, nm in enumerate(names):
+                rows.append(dict(
+                    preset=preset, stage=stage, mix=mix_name, app=nm,
+                    sockets=sockets, cores=cores[a],
+                    runtime_ms=f"{pred[a]:.5f}",
+                    anchor_ms=f"{anchors[a]:.5f}",
+                    err_pct=f"{100 * (pred[a] / anchors[a] - 1):.1f}",
+                    solo_runtime_ms=f"{solo_rt[nm]:.5f}",
+                    solo_anchor_ms=f"{solo_anchor[nm]:.5f}",
+                    mix_bw_gbs=f"{out['sim_bw_gbs'][m]:.1f}",
+                ))
+    _write_csv(rows, f"app_validation_mix{_suffix(preset, sockets)}")
+    return results
+
+
+def main(full: bool = False, preset: str = "ddr4_2666", grid: bool = False,
+         mix: bool = False, sockets: int = 1):
     presets = PRESET_ORDER if grid else (preset,)
-    return {p: run_preset(p, full=full) for p in presets}
+    if mix:
+        return {p: run_mixes(p, full=full, sockets=sockets)
+                for p in presets}
+    return {p: run_preset(p, full=full, sockets=sockets) for p in presets}
+
+
+def main_mix(full: bool = False, **kw):
+    """Registry entry point for the multiprogrammed-mix benchmark."""
+    kw.setdefault("grid", True)
+    return main(full=full, mix=True, **kw)
 
 
 if __name__ == "__main__":
@@ -102,5 +204,12 @@ if __name__ == "__main__":
                     choices=list(PRESET_ORDER))
     ap.add_argument("--grid", action="store_true",
                     help="run the full preset x stage x app grid")
+    ap.add_argument("--mix", action="store_true",
+                    help="multiprogrammed per-core trace mixes "
+                         "(per-app-in-mix MAPE next to solo numbers)")
+    ap.add_argument("--sockets", type=int, default=1, choices=(1, 2),
+                    help="traffic sockets (2 doubles the frontend "
+                         "issue capacity — needed to saturate hbm2e)")
     args = ap.parse_args()
-    main(full=args.full, preset=args.preset, grid=args.grid)
+    main(full=args.full, preset=args.preset, grid=args.grid,
+         mix=args.mix, sockets=args.sockets)

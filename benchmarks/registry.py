@@ -31,10 +31,12 @@ class BenchSpec:
     module: str                       # dotted module with main(full=...)
     description: str
     reports: tuple = ()               # artifact globs under reports/
+    main_attr: str = "main"           # entry point inside the module
 
     @property
     def main(self) -> Callable:
-        return importlib.import_module(self.module).main
+        return getattr(importlib.import_module(self.module),
+                       self.main_attr)
 
 
 BENCHMARKS: dict[str, BenchSpec] = {s.name: s for s in (
@@ -61,8 +63,13 @@ BENCHMARKS: dict[str, BenchSpec] = {s.name: s for s in (
               ()),
     BenchSpec("app_validation", "benchmarks.app_validation",
               "per-app runtime MAPE vs per-preset anchors "
-              "(--preset / --grid)",
-              ("app_validation*.csv",)),
+              "(--preset / --grid / --sockets)",
+              ("app_validation.csv", "app_validation_[0-9]s.csv",
+               "app_validation_ddr5*.csv", "app_validation_hbm2e*.csv")),
+    BenchSpec("app_mix", "benchmarks.app_validation",
+              "multiprogrammed per-core trace mixes: per-app-in-mix "
+              "runtime MAPE next to solo numbers (--mix mode)",
+              ("app_validation_mix*.csv",), main_attr="main_mix"),
 )}
 
 

@@ -69,7 +69,6 @@ class QueueState(NamedTuple):
     fbank: jnp.ndarray         # rank*16 + bank
     row: jnp.ndarray
     is_chase: jnp.ndarray      # pointer-chase (latency-probe) request
-    core: jnp.ndarray          # issuing core id (for MSHR accounting)
 
 
 class BankState(NamedTuple):
@@ -109,18 +108,23 @@ class TickStats(NamedTuple):
     sum_if_lat_ps: jnp.ndarray     # interface view (CPU-domain), float32
     chase_rd: jnp.ndarray
     sum_chase_lat_ticks: jnp.ndarray
-    served_by_core: jnp.ndarray    # (N_CORES,) completions, MSHR release
 
 
-N_CORES_STAT = 24
+def init_queue(dram: DramParams, policy: SchedulerPolicy,
+               n_sockets: int = 1) -> QueueState:
+    """Empty per-channel request queue: (C, queue_depth) int32 slots.
 
-
-def init_queue(dram: DramParams, policy: SchedulerPolicy) -> QueueState:
-    """Empty per-channel request queue: (C, queue_depth) int32 slots."""
-    C, Q = dram.n_channels, policy.queue_depth
+    ``queue_depth`` is derived from one socket's per-window offered
+    traffic (see `SchedulerPolicy`); ``n_sockets`` scales the staging
+    capacity so a multi-socket frontend keeps the same invariant —
+    without it a two-socket ddr4 run (47 cores x 64 req / 6 channels
+    ~ 501/window) would overflow the staging slots and silently drop
+    replayed demand.
+    """
+    C, Q = dram.n_channels, policy.queue_depth * n_sockets
     z = jnp.zeros((C, Q), jnp.int32)
     return QueueState(valid=z, is_write=z, arrival=z, issue_cycle=z,
-                      fbank=z, row=z - 1, is_chase=z, core=z)
+                      fbank=z, row=z - 1, is_chase=z)
 
 
 def init_banks(dram: DramParams) -> BankState:
@@ -267,7 +271,6 @@ def tick(queue: QueueState, banks: BankState, t, *,
     s_row = pick(queue.row)
     s_arr = pick(queue.arrival)
     s_issue = pick(queue.issue_cycle)
-    s_core = pick(queue.core)
     s_rank = s_fb // nbanks
     s_bg = (s_fb % nbanks) // dram.banks_per_group
     s_iswr = pick(is_wr.astype(jnp.int32)) == 1
@@ -368,7 +371,5 @@ def tick(queue: QueueState, banks: BankState, t, *,
         sum_if_lat_ps=jnp.sum(jnp.where(s_rd, if_lat_ps, 0.0)),
         chase_rd=jnp.sum((s_rd & s_chase).astype(jnp.int32)),
         sum_chase_lat_ticks=jnp.sum(jnp.where(s_rd & s_chase, rd_lat, 0)),
-        served_by_core=jnp.zeros((N_CORES_STAT,), jnp.int32).at[s_core].add(
-            s_cas.astype(jnp.int32), mode="drop"),
     )
     return queue, banks, stats

@@ -36,6 +36,9 @@ from repro.core.shard import sharded_vmap
 WRITE_MIXES = (0, 8, 16, 24, 32)
 #: demand requests per traffic core per window; 23 traffic cores,
 #: 64 B lines, 1000 cycles at 2.1 GHz => pace 64 ~ 198 GB/s offered.
+#: Offered bandwidth scales with `StageConfig.n_sockets`: a second
+#: socket (47 traffic cores) makes pace 64 ~ 404 GB/s — the knob that
+#: drives HBM2e past the single-socket frontend ceiling.
 DEFAULT_PACES = (1, 2, 4, 6, 8, 12, 16, 20, 24, 28, 32, 40, 48, 64)
 
 

@@ -66,6 +66,13 @@ class StageConfig:
     l_ir_init_cycles: float = 1.0     # DAMOV immediate-response latency
     windows: int = 96
     warmup: int = 32
+    #: traffic sockets: each adds 24 frontend cores (one shared chase
+    #: probe overall).  2 sockets double the frontend issue capacity —
+    #: required to drive HBM2e past the single-socket ~200 GB/s ceiling.
+    n_sockets: int = 1
+    #: multi-socket channel ownership: "interleaved" (all sockets hit
+    #: all channels) or "partitioned" (n_channels/n_sockets per socket).
+    socket_channels: str = "interleaved"
     platform: PlatformParams = dataclasses.field(
         default_factory=lambda: DEFAULT_PLATFORM)
 
@@ -81,7 +88,8 @@ class StageConfig:
             mapping=self.mapping, prefetch=self.prefetch,
             cache_path_cycles=self.platform.cpu.cache_path_cycles,
             noc_req_cycles=n.req_cycles, noc_resp_cycles=n.resp_cycles,
-            dram=self.platform.dram)
+            dram=self.platform.dram, n_sockets=self.n_sockets,
+            socket_channels=self.socket_channels)
 
 
 class WindowOut(NamedTuple):
@@ -183,7 +191,8 @@ def run_frontend(cfg: StageConfig, frontend):
     """
     clock = cfg.clock()
     wcfg = cfg.workload_config()
-    queue = dram.init_queue(cfg.platform.dram, cfg.policy)
+    queue = dram.init_queue(cfg.platform.dram, cfg.policy,
+                            n_sockets=cfg.n_sockets)
     banks = dram.init_banks(cfg.platform.dram)
     fstate = frontend.init_state()
     l_ir0 = jnp.asarray(cfg.l_ir_init_cycles, jnp.float32)

@@ -31,8 +31,13 @@ picosecond clocking (Listing 1b) advances integer ps counters — the
 0.08% rounding of DDR5's 416.67 ps to 417 ps is documented here and
 absorbed by the preset's reference anchors.
 
-The CPU side of the platform (24-core Skylake frontend) is held fixed
+The CPU side of the platform (24-core Skylake socket) is held fixed
 across presets: the sweep isolates the *memory device*, not the core.
+The number of **sockets** is a `StageConfig` knob, not a preset
+property: ``stage_for("04-model-correct", "hbm2e", n_sockets=2)``
+doubles the frontend issue capacity (47 traffic cores), which is what
+HBM2e needs to be driven past the single-socket ~200 GB/s ceiling
+(docs/VALIDATION.md documents the measured effect).
 """
 from __future__ import annotations
 

@@ -40,7 +40,12 @@ from repro.core import addrmap
 from repro.core.dram import QueueState
 from repro.core.timing import DramParams
 
-N_CORES = 24
+N_CORES_PER_SOCKET = 24    # the paper's Skylake socket (Table 1)
+#: single-socket geometry aliases (the paper's platform; kept as module
+#: constants because the DDR4 validation path is defined on them).
+#: Multi-socket geometry is derived per `WorkloadConfig` — see
+#: `WorkloadConfig.n_cores` / `.n_traffic` / `.chase_core`.
+N_CORES = N_CORES_PER_SOCKET
 N_TRAFFIC = 23
 CHASE_CORE = 23
 CAP_DEMAND = 64            # max demand candidates / core / window
@@ -64,6 +69,26 @@ class WorkloadConfig:
     ``cache_path_cycles`` / ``noc_*_cycles`` are CPU cycles; ``dram``
     carries the device geometry the injected addresses decode against
     (the DDR4-2666 default or any `repro.core.presets` device).
+
+    ``n_sockets`` selects the frontend geometry: each socket adds
+    `N_CORES_PER_SOCKET` cores, all of them traffic generators except
+    one shared pointer-chase probe on the last core of the last socket
+    (the latency instrument stays a single serialized stream, as in
+    Mess).  The per-socket frontend issue capacity is
+    ``N_CORES_PER_SOCKET * CAP_DEMAND`` demands per window, so total
+    offered bandwidth scales with sockets — this is what lets HBM2e be
+    driven past the single-socket ~200 GB/s ceiling.
+
+    ``socket_channels`` picks the channel-ownership model of a
+    multi-socket platform:
+
+    * ``"interleaved"`` (default) — both sockets address every channel
+      (one shared physical address space, channel-interleaved), the
+      common server configuration with NUMA interleaving on.
+    * ``"partitioned"``  — each socket owns ``n_channels / n_sockets``
+      channels (NUMA-local allocation); a socket's requests are folded
+      into its own partition, so cross-socket queue contention is
+      structurally impossible.
     """
 
     mapping: str = "simple"
@@ -73,6 +98,31 @@ class WorkloadConfig:
     noc_req_cycles: int = 0    # extra request-path NOC cycles (stage 06)
     noc_resp_cycles: int = 0
     dram: DramParams = dataclasses.field(default_factory=DramParams)
+    n_sockets: int = 1
+    socket_channels: str = "interleaved"   # or "partitioned"
+
+    def __post_init__(self):
+        if self.socket_channels not in ("interleaved", "partitioned"):
+            raise ValueError(
+                f"socket_channels must be 'interleaved' or 'partitioned', "
+                f"got {self.socket_channels!r}")
+        if self.n_sockets < 1:
+            raise ValueError(f"n_sockets must be >= 1, got {self.n_sockets}")
+
+    @property
+    def n_cores(self) -> int:
+        """Total frontend cores across all sockets."""
+        return N_CORES_PER_SOCKET * self.n_sockets
+
+    @property
+    def n_traffic(self) -> int:
+        """Traffic-generator cores (all but the shared chase probe)."""
+        return self.n_cores - 1
+
+    @property
+    def chase_core(self) -> int:
+        """The shared pointer-chase probe (last core, last socket)."""
+        return self.n_cores - 1
 
 
 class CoreState(NamedTuple):
@@ -81,9 +131,9 @@ class CoreState(NamedTuple):
     chase_carry: jnp.ndarray   # leftover CPU cycles of the chase loop
 
 
-def init_cores() -> CoreState:
-    return CoreState(seq=jnp.zeros((N_CORES,), jnp.int32),
-                     backlog=jnp.zeros((N_CORES,), jnp.int32),
+def init_cores(n_cores: int = N_CORES) -> CoreState:
+    return CoreState(seq=jnp.zeros((n_cores,), jnp.int32),
+                     backlog=jnp.zeros((n_cores,), jnp.int32),
                      chase_carry=jnp.zeros((), jnp.int32))
 
 
@@ -121,7 +171,7 @@ def _chase_line(k):
 
 
 class Candidates(NamedTuple):
-    """(24, CAND) candidate requests for one window."""
+    """(n_cores, CAND) candidate requests for one window."""
 
     valid: jnp.ndarray
     line: jnp.ndarray          # uint32 cache-line index
@@ -170,9 +220,10 @@ def generate(cores: CoreState, pace, wr_num, l_ir_cycles,
     backlog / chase bookkeeping that `MessFrontend.update` folds into
     the next window's `CoreState`.
     """
-    cid = jnp.arange(N_CORES, dtype=jnp.int32)[:, None]       # (24,1)
+    n_cores = cfg.n_cores
+    cid = jnp.arange(n_cores, dtype=jnp.int32)[:, None]       # (N,1)
     j = jnp.arange(CAND, dtype=jnp.int32)[None, :]            # (1,CAND)
-    is_traffic = cid < N_TRAFFIC
+    is_traffic = cid < cfg.n_traffic
 
     # ---- traffic demand ------------------------------------------------
     # Closed loop: per-window demand capped by the MSHR budget.
@@ -201,9 +252,9 @@ def generate(cores: CoreState, pace, wr_num, l_ir_cycles,
 
     # ---- pointer chase (the latency probe) ------------------------------
     cv, c_line, c_issue, chase_iters, chase_carry, iter_cycles = chase_probe(
-        cores.seq[CHASE_CORE], cores.chase_carry, l_ir_cycles, cfg,
+        cores.seq[cfg.chase_core], cores.chase_carry, l_ir_cycles, cfg,
         window_cycles)
-    c_valid = (cid == CHASE_CORE) & cv[None, :]
+    c_valid = (cid == cfg.chase_core) & cv[None, :]
 
     cand = Candidates(
         valid=(t_valid & is_traffic) | c_valid,
@@ -228,19 +279,36 @@ def inject_queue(queue: QueueState, cand: Candidates, clock, w,
     `Candidates` and hands them off here.
 
     Returns ``(queue', acc_demand, n_accepted)`` where ``acc_demand`` is
-    the (24,) per-core count of accepted demand (non-prefetch) requests
-    — the frontend uses it to advance its own state.
+    the (n_cores,) per-core count of accepted demand (non-prefetch)
+    requests — the frontend uses it to advance its own state.
+
+    Multi-socket channel ownership (``cfg.socket_channels``): with
+    ``"partitioned"`` a request's decoded channel is folded into its
+    socket's ``n_channels / n_sockets`` partition; ``"interleaved"``
+    leaves the decode untouched (all sockets address all channels).
     """
     C, Q = queue.valid.shape
-    n = N_CORES * CAND
+    n_cores = cand.valid.shape[0]
+    n = n_cores * CAND
     flat = jax.tree_util.tree_map(lambda a: a.reshape(n), cand)
-    core_of = jnp.repeat(jnp.arange(N_CORES, dtype=jnp.int32), CAND)
+    core_of = jnp.repeat(jnp.arange(n_cores, dtype=jnp.int32), CAND)
 
     dec = addrmap.decode(flat.line, cfg.mapping, dram=cfg.dram)
-    ch = jnp.where(flat.valid, dec.channel, C)        # invalid -> ch C
-    # admission key: chase first, then issue order, then core id
+    channel = dec.channel
+    if cfg.n_sockets > 1 and cfg.socket_channels == "partitioned":
+        if C % cfg.n_sockets:
+            raise ValueError(
+                f"partitioned ownership needs n_channels ({C}) divisible "
+                f"by n_sockets ({cfg.n_sockets})")
+        cps = C // cfg.n_sockets
+        socket_of = core_of // N_CORES_PER_SOCKET
+        channel = socket_of * cps + channel % cps
+    ch = jnp.where(flat.valid, channel, C)            # invalid -> ch C
+    # admission key: chase first, then issue order, then core id; the
+    # core stride must exceed the largest core count (64 covers two
+    # sockets) or wrapped ids would re-rank cores across sockets
     key = ((1 - flat.is_chase.astype(jnp.int32)) * (1 << 24)
-           + flat.issue_cycle * 32 + core_of % 32)
+           + flat.issue_cycle * 64 + core_of)
     order = jnp.argsort(ch * (1 << 26) + key)
     ch_s = ch[order]
 
@@ -276,10 +344,9 @@ def inject_queue(queue: QueueState, cand: Candidates, clock, w,
         fbank=put(queue.fbank, dec.flat_bank_for(cfg.dram)[order]),
         row=put(queue.row, dec.row[order]),
         is_chase=put(queue.is_chase, flat.is_chase[order].astype(jnp.int32)),
-        core=put(queue.core, core_of[order]),
     )
 
-    acc_demand = jnp.zeros(N_CORES, jnp.int32).at[core_of[order]].add(
+    acc_demand = jnp.zeros(n_cores, jnp.int32).at[core_of[order]].add(
         (accepted & ~flat.is_pf[order]).astype(jnp.int32))
     return queue, acc_demand, jnp.sum(accepted.astype(jnp.int32))
 
@@ -310,19 +377,19 @@ class MessFrontend:
         self.cfg = cfg
 
     def init_state(self) -> CoreState:
-        return init_cores()
+        return init_cores(self.cfg.n_cores)
 
     def bound(self, state: CoreState, l_ir_cycles, budget, window_cycles):
         return generate(state, self.pace, self.wr_num, l_ir_cycles,
                         self.cfg, window_cycles, budget)
 
     def update(self, state: CoreState, aux, acc_demand) -> CoreState:
-        demanded = jnp.where(jnp.arange(N_CORES) < N_TRAFFIC,
-                             aux["want"], 0)
+        cid = jnp.arange(self.cfg.n_cores)
+        demanded = jnp.where(cid < self.cfg.n_traffic, aux["want"], 0)
         backlog = jnp.clip(demanded - jnp.minimum(acc_demand, demanded),
                            0, BACKLOG_MAX)
         seq = state.seq + jnp.where(
-            jnp.arange(N_CORES) < N_TRAFFIC, aux["quota"],
+            cid < self.cfg.n_traffic, aux["quota"],
             aux["chase_iters"]).astype(jnp.int32)
         return CoreState(seq=seq, backlog=backlog,
                          chase_carry=aux["chase_carry"])

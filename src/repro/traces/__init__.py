@@ -3,22 +3,34 @@
 Public API:
 
 * `Trace`, `make_trace`, `stack_traces` — compact JAX-native traces.
+* `TraceMix`, `assign_traces`, `stack_mixes`, `split_cores` —
+  per-core multiprogrammed trace assignment (`repro.traces.mix`).
 * `KERNELS`, `make_suite`               — DAMOV-style app generators.
-* `TraceFrontend`                       — bound-phase replay frontend.
+* `TraceFrontend`                       — per-core bound-phase replay
+                                          frontend (solo trace or mix).
 * `replay_suite`, `replay_stages`       — device-sharded replay engine.
+* `replay_mix`, `replay_mixes`          — multiprogrammed replay with
+                                          per-app-in-mix runtimes.
 * `replay_grid`                         — preset x stage x app grid.
-* `anchor_runtime_ms`, `mape`           — per-preset runtime anchors.
+* `anchor_runtime_ms`, `anchor_mix_ms`, `mape` — per-preset runtime
+                                          anchors (solo and mixed).
 """
-from repro.traces.anchors import anchor_runtime_ms, anchor_suite_ms, mape
+from repro.traces.anchors import (anchor_mix_ms, anchor_runtime_ms,
+                                  anchor_suite_ms, mape)
 from repro.traces.frontend import TraceFrontend, TraceState
 from repro.traces.kernels import KERNELS, make_suite
-from repro.traces.replay import replay_grid, replay_stages, replay_suite
+from repro.traces.mix import (TraceMix, assign_traces, mix_stats,
+                              split_cores, stack_mixes)
+from repro.traces.replay import (replay_grid, replay_mix, replay_mixes,
+                                 replay_stages, replay_suite)
 from repro.traces.trace import Trace, make_trace, stack_traces, trace_stats
 
 __all__ = [
     "Trace", "make_trace", "stack_traces", "trace_stats",
+    "TraceMix", "assign_traces", "stack_mixes", "split_cores", "mix_stats",
     "KERNELS", "make_suite",
     "TraceFrontend", "TraceState",
     "replay_suite", "replay_stages", "replay_grid",
-    "anchor_runtime_ms", "anchor_suite_ms", "mape",
+    "replay_mix", "replay_mixes",
+    "anchor_runtime_ms", "anchor_suite_ms", "anchor_mix_ms", "mape",
 ]

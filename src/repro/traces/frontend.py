@@ -7,24 +7,34 @@ response latency, PI controller, and MSHR closed loop — the decoupling
 bug and its corrections apply to real access patterns, not just
 synthetic sweeps.
 
-Replay model (all fixed-shape, `vmap`-safe):
+Replay model (all fixed-shape, `vmap`-safe), generalized to **per-core
+cursors**:
 
-* The trace is sharded data-parallel across the 23 traffic cores: every
-  core replays the same delta stream against its own base region
-  (``core * footprint``), i.e. a multi-threaded kernel with per-core
-  shards.  One shared cursor tracks progress.
-* Per window the frontend slices the next `CAP_DEMAND` accesses
-  (`dynamic_slice` at the cursor) and prices each in CPU cycles:
-  an *independent* access costs the MSHR-closed-loop issue interval
-  (``window_cycles / budget`` — Little's-law pacing, identical to the
-  Mess generator's throttle), a *dependent* access costs the full
-  bound-phase load-to-use latency (cache path + NOC + immediate
-  response) because it cannot issue before the previous response.
-  The consumed prefix is the accesses whose cumulative cost fits the
-  window (+ carry-over), which is precisely how far the application
-  advances this window.
+* Every core owns its own replay cursor into its own stream.  Two
+  drive modes share one code path:
+
+  - a solo `Trace`: the stream is sharded data-parallel across all
+    traffic cores — every core replays the same delta sequence against
+    its own base region (``core * footprint``), i.e. a multi-threaded
+    kernel with per-core shards (cursors advance in lockstep because
+    pricing is address-independent);
+  - a `TraceMix` (`repro.traces.mix`): a ``(n_cores,)``-indexed batch
+    of traces with per-core lengths, footprints, and phase offsets — a
+    multiprogrammed workload, each core pricing its *own* stream.
+
+* Per window the frontend slices each core's next `CAP_DEMAND`
+  accesses (per-core `dynamic_slice` at that core's cursor) and prices
+  each in CPU cycles: an *independent* access costs the MSHR-closed-
+  loop issue interval (``window_cycles / budget`` — Little's-law
+  pacing, identical to the Mess generator's throttle), a *dependent*
+  access costs the full bound-phase load-to-use latency (cache path +
+  NOC + immediate response) because it cannot issue before the
+  previous response.  The consumed prefix is the accesses whose
+  cumulative cost fits the window (+ per-core carry-over), which is
+  precisely how far that core's application advances this window.
 * The pointer-chase probe core keeps running (`workload.chase_probe`):
-  it is the platform's latency instrument, shared by every frontend.
+  it is the platform's latency instrument, shared by every frontend
+  (and by every socket — see `WorkloadConfig.n_sockets`).
 
 Abstraction (documented, Mess-style): demand rejected by a full channel
 queue is not replayed — with 256-deep queues this is rare, and dropping
@@ -37,71 +47,113 @@ import jax.numpy as jnp
 from typing import NamedTuple
 
 from repro.core import workload
-from repro.core.workload import (CAND, CAP_DEMAND, CHASE_CORE, N_CORES,
-                                 N_TRAFFIC, Candidates, WorkloadConfig)
+from repro.core.workload import (CAND, CAP_DEMAND, Candidates,
+                                 WorkloadConfig)
+from repro.traces.mix import TraceMix
 from repro.traces.trace import Trace
 
 
 class TraceState(NamedTuple):
-    pos: jnp.ndarray          # () int32 shared cursor into the trace
-    line_cum: jnp.ndarray     # () int32 running delta sum at the cursor
-    carry: jnp.ndarray        # () int32 leftover CPU cycles
+    pos: jnp.ndarray          # (n_cores,) int32 per-core trace cursor
+    line_cum: jnp.ndarray     # (n_cores,) int32 running delta sum
+    carry: jnp.ndarray        # (n_cores,) int32 leftover CPU cycles
     chase_seq: jnp.ndarray    # () int32 probe stream position
     chase_carry: jnp.ndarray  # () int32 probe loop carry
 
 
 class TraceFrontend:
-    """Replay one application trace through the bound phase.
+    """Replay an application trace (or a per-core mix) through the
+    bound phase.
 
-    Closes over the (possibly traced/batched) `Trace` arrays, so
-    ``run_frontend(cfg, TraceFrontend(trace, wcfg))`` vmaps across a
-    stacked application axis with a single compiled program.
+    Closes over the (possibly traced/batched) `Trace` / `TraceMix`
+    arrays, so ``run_frontend(cfg, TraceFrontend(trace, wcfg))`` vmaps
+    across a stacked application (or mix) axis with a single compiled
+    program.
     """
 
-    def __init__(self, trace: Trace, cfg: WorkloadConfig):
+    def __init__(self, trace: Trace | TraceMix, cfg: WorkloadConfig):
         self.trace = trace
         self.cfg = cfg
+        self.is_mix = isinstance(trace, TraceMix)
+        if self.is_mix and trace.delta.shape[-2] != cfg.n_cores:
+            raise ValueError(
+                f"mix has {trace.delta.shape[-2]} cores but the platform "
+                f"has {cfg.n_cores} ({cfg.n_sockets} socket(s))")
+
+    # ---- per-core views of the trace arrays ---------------------------
+
+    def _per_core_slice(self, pos):
+        """(n_cores, CAP_DEMAND) delta/write/dep slices at each cursor."""
+        tr = self.trace
+        sl = lambda a, p: jax.lax.dynamic_slice(a, (p,), (CAP_DEMAND,))
+        if self.is_mix:
+            take = jax.vmap(sl)
+            return (take(tr.delta, pos), take(tr.is_write, pos),
+                    take(tr.dep, pos))
+        take = jax.vmap(sl, in_axes=(None, 0))
+        return (take(tr.delta, pos), take(tr.is_write, pos),
+                take(tr.dep, pos))
+
+    def _targets(self):
+        """(n_cores,) per-core access counts (0 = idle / chase core)."""
+        cid = jnp.arange(self.cfg.n_cores, dtype=jnp.int32)
+        if self.is_mix:
+            return self.trace.length
+        return jnp.where(cid < self.cfg.n_traffic, self.trace.length, 0)
+
+    def _footprints(self):
+        """(n_cores,) per-core footprints and the region stride."""
+        if self.is_mix:
+            return self.trace.footprint_lines, self.trace.region_lines
+        f = jnp.broadcast_to(self.trace.footprint_lines,
+                             (self.cfg.n_cores,))
+        return f, self.trace.footprint_lines
 
     def init_state(self) -> TraceState:
-        """Fresh replay cursor at the head of the trace (all zeros)."""
-        z = jnp.zeros((), jnp.int32)
+        """Fresh per-core cursors (at each core's phase offset)."""
+        n = self.cfg.n_cores
+        z = jnp.zeros((n,), jnp.int32)
+        zs = jnp.zeros((), jnp.int32)
+        if self.is_mix:
+            return TraceState(pos=self.trace.pos0,
+                              line_cum=self.trace.line_cum0,
+                              carry=z, chase_seq=zs, chase_carry=zs)
         return TraceState(pos=z, line_cum=z, carry=z,
-                          chase_seq=z, chase_carry=z)
+                          chase_seq=zs, chase_carry=zs)
 
     def bound(self, state: TraceState, l_ir_cycles, budget, window_cycles):
-        """One window's bound phase: price + emit the next trace slice.
+        """One window's bound phase: price + emit each core's slice.
 
         Args:
-            state: replay cursor (`TraceState`).
+            state: per-core replay cursors (`TraceState`).
             l_ir_cycles: current immediate-response latency, CPU cycles
                 (int32, traced; PI-controlled after stage 04).
             budget: per-core MSHR closed-loop demand budget for this
                 window (requests, from `workload.littles_law_budget`).
             window_cycles: ZSim window length in CPU cycles (static).
         Returns:
-            ``(Candidates, aux)`` — the (24, CAND) candidate requests
-            (issue cycles are CPU cycles within the window) and the
-            bookkeeping dict `update` folds into the next state.
+            ``(Candidates, aux)`` — the (n_cores, CAND) candidate
+            requests (issue cycles are CPU cycles within the window)
+            and the bookkeeping dict `update` folds into the next state.
         """
-        tr = self.trace
-        cid = jnp.arange(N_CORES, dtype=jnp.int32)[:, None]     # (24,1)
-        j = jnp.arange(CAND, dtype=jnp.int32)[None, :]          # (1,CAND)
-        jj = jnp.arange(CAP_DEMAND, dtype=jnp.int32)            # (CAP,)
-        is_traffic = cid < N_TRAFFIC
+        cfg = self.cfg
+        n_cores = cfg.n_cores
+        cid = jnp.arange(n_cores, dtype=jnp.int32)[:, None]     # (N,1)
+        jj = jnp.arange(CAP_DEMAND, dtype=jnp.int32)[None, :]   # (1,CAP)
+        is_traffic = cid < cfg.n_traffic
 
-        # ---- next CAP_DEMAND accesses at the cursor --------------------
-        pos = jnp.minimum(state.pos, tr.length)
-        sl = lambda a: jax.lax.dynamic_slice(a, (pos,), (CAP_DEMAND,))
-        delta = sl(tr.delta)
-        is_wr = sl(tr.is_write)
-        dep = sl(tr.dep)
-        in_range = pos + jj < tr.length
+        # ---- each core's next CAP_DEMAND accesses at its cursor --------
+        target = self._targets()                                # (N,)
+        n_slots = self.trace.delta.shape[-1]
+        pos = jnp.minimum(state.pos, n_slots - CAP_DEMAND)      # (N,)
+        delta, is_wr, dep = self._per_core_slice(pos)           # (N,CAP)
+        in_range = pos[:, None] + jj < target[:, None]          # (N,CAP)
 
         # ---- the shared latency probe ----------------------------------
         cv, c_line, c_issue, chase_iters, chase_carry, iter_cycles = \
             workload.chase_probe(state.chase_seq, state.chase_carry,
-                                 l_ir_cycles, self.cfg, window_cycles)
-        c_valid = (cid == CHASE_CORE) & cv[None, :]
+                                 l_ir_cycles, cfg, window_cycles)
+        c_valid = (cid == cfg.chase_core) & cv[None, :]
 
         # ---- cycle pricing under the MSHR closed loop ------------------
         # a dep-marked access is priced exactly like one probe iteration
@@ -109,60 +161,61 @@ class TraceFrontend:
         # issue interval
         dep_cycles = iter_cycles
         ind_cycles = jnp.maximum(window_cycles // jnp.maximum(budget, 1), 1)
-        cost = jnp.where(dep == 1, dep_cycles, ind_cycles)
-        fin = jnp.cumsum(cost)                       # finish cycle of k-th
+        cost = jnp.where(dep == 1, dep_cycles, ind_cycles)      # (N,CAP)
+        fin = jnp.cumsum(cost, axis=1)               # finish cycle of k-th
         start_c = fin - cost
-        avail = window_cycles + state.carry
+        avail = (window_cycles + state.carry)[:, None]          # (N,1)
         take = in_range & (fin <= avail)             # prefix by monotone fin
-        n_take = jnp.sum(take.astype(jnp.int32))
-        used = jnp.sum(jnp.where(take, cost, 0))
-        # carry at most one window of slack; none once the trace is done
-        new_carry = jnp.clip(jnp.where(jnp.any(in_range), avail - used, 0),
-                             0, window_cycles)
+        n_take = jnp.sum(take.astype(jnp.int32), axis=1)        # (N,)
+        used = jnp.sum(jnp.where(take, cost, 0), axis=1)        # (N,)
+        # carry at most one window of slack; none once a stream is done
+        new_carry = jnp.clip(
+            jnp.where(jnp.any(in_range, axis=1),
+                      avail[:, 0] - used, 0),
+            0, window_cycles)                                   # (N,)
 
-        # ---- absolute lines: per-core shard base + wrapped delta sum ---
-        # Each core gets a hashed *phase* within its shard: real
+        # ---- absolute lines: per-core region base + wrapped delta sum -
+        # Each core gets a hashed *phase* within its footprint: real
         # data-parallel threads do not run in address lockstep, and
-        # without the stagger all 23 cores hit the same channel/bank
-        # residues simultaneously (serializing 6 channels down to ~3).
-        cum = state.line_cum + jnp.cumsum(delta)                # (CAP,)
-        phase = (cid.astype(jnp.uint32) * jnp.uint32(2654435761)
-                 % tr.footprint_lines.astype(jnp.uint32)
-                 ).astype(jnp.int32)                            # (24,1)
-        idx = jnp.remainder(cum[None, :] + phase,
-                            tr.footprint_lines)                 # (24,CAP)
-        base = (cid * tr.footprint_lines).astype(jnp.uint32)    # (24,1)
+        # without the stagger all traffic cores hit the same channel/
+        # bank residues simultaneously (serializing the channels).
+        foot, region = self._footprints()                       # (N,), ()
+        cum = state.line_cum[:, None] + jnp.cumsum(delta, axis=1)
+        phase = (cid[:, 0].astype(jnp.uint32) * jnp.uint32(2654435761)
+                 % jnp.maximum(foot, 1).astype(jnp.uint32)
+                 ).astype(jnp.int32)                            # (N,)
+        idx = jnp.remainder(cum + phase[:, None],
+                            jnp.maximum(foot, 1)[:, None])      # (N,CAP)
+        base = (cid[:, 0] * region).astype(jnp.uint32)[:, None]  # (N,1)
         t_line = base + idx.astype(jnp.uint32)
-        t_valid = is_traffic & take[None, :]
+        t_valid = is_traffic & take
         t_issue = jnp.minimum(start_c, window_cycles - 1)
 
         # pad the demand slice up to CAND slots (no prefetch slots used)
         padc = CAND - CAP_DEMAND
         pad2 = lambda a, v: jnp.pad(a, ((0, 0), (0, padc)),
                                     constant_values=v)
-        pad_t = lambda a, v: jnp.pad(a, (0, padc), constant_values=v)
 
         cand = Candidates(
             valid=pad2(t_valid, False) | c_valid,
             line=jnp.where(is_traffic, pad2(t_line, 0), c_line),
-            is_write=jnp.where(is_traffic,
-                               pad_t(is_wr, 0)[None, :] == 1, False),
-            issue_cycle=jnp.where(is_traffic, pad_t(t_issue, 0)[None, :],
+            is_write=jnp.where(is_traffic, pad2(is_wr, 0) == 1, False),
+            issue_cycle=jnp.where(is_traffic, pad2(t_issue, 0),
                                   c_issue).astype(jnp.int32),
             is_chase=c_valid,
-            is_pf=jnp.zeros((N_CORES, CAND), bool),
+            is_pf=jnp.zeros((n_cores, CAND), bool),
         )
         aux = dict(n_take=n_take, new_carry=new_carry,
                    line_cum_next=state.line_cum
-                   + jnp.sum(jnp.where(take, delta, 0)),
+                   + jnp.sum(jnp.where(take, delta, 0), axis=1),
                    chase_iters=chase_iters, chase_carry=chase_carry)
         return cand, aux
 
     def update(self, state: TraceState, aux, acc_demand) -> TraceState:
-        """Advance the cursor past the accesses consumed this window.
+        """Advance each cursor past the accesses consumed this window.
 
         ``acc_demand`` (per-core accepted demand counts) is unused:
-        rejected demand is dropped (see module doc) so the cursor moves
+        rejected demand is dropped (see module doc) so the cursors move
         by the bound-phase take, not the queue-accept count.
         """
         del acc_demand   # rejected demand is dropped (see module doc)
@@ -175,7 +228,7 @@ class TraceFrontend:
         )
 
     def progress(self, state: TraceState):
-        """Monotone trace position (accesses consumed); the replay
-        engine compares it against ``trace.length`` to find the
-        completion window."""
+        """(n_cores,) monotone per-core trace positions (accesses
+        consumed); the replay engine compares them against the per-core
+        targets to find each core's completion window."""
         return state.pos

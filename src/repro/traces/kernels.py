@@ -26,6 +26,10 @@ stream of one application class from the DAMOV taxonomy:
 
 Generation is host-side numpy (deterministic PCG64 per kernel+seed);
 the emitted `Trace` is the JAX-native object the replay engine batches.
+Kernels registered in `KERNELS` are picked up by the validation
+benchmarks and can be combined into multiprogrammed per-core mixes
+(`repro.traces.mix.assign_traces`; `benchmarks/app_validation.py`
+``MIXES``) — docs/WORKLOADS.md walks through authoring a new one.
 """
 from __future__ import annotations
 

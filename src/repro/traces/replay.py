@@ -11,6 +11,13 @@ configuration (clock model, scheduler policy, channel/bank geometry),
 which changes program shapes; `replay_grid` wraps that iteration so a
 full (preset x stage x app) scenario grid is one invocation.
 
+Multiprogrammed workloads ride the same machinery: a `TraceMix`
+(per-core trace batch, `repro.traces.mix`) replays through
+`replay_mix`, and a *stack* of mixes through `replay_mixes` — the mix
+axis is the sharded batch axis, exactly like the app axis of a solo
+suite.  The frontend keeps one cursor per core either way, so per-app
+runtimes in a mix come back per core and are reduced by `app_id`.
+
 Outputs per application:
 
 * the three views (simulator / interface / application bandwidth and
@@ -29,6 +36,7 @@ import numpy as np
 from repro.core.platform import StageConfig, run_frontend
 from repro.core.shard import sharded_vmap
 from repro.traces.frontend import TraceFrontend
+from repro.traces.mix import TraceMix
 from repro.traces.trace import Trace
 
 #: per-app result keys that are plain per-window scalars in the views
@@ -38,15 +46,41 @@ VIEW_KEYS = ("sim_bw_gbs", "sim_lat_ns", "if_bw_gbs", "if_lat_ns",
 
 @functools.lru_cache(maxsize=None)
 def _replay_fn(cfg: StageConfig):
-    """One compiled program: the app axis is the sharded batch axis."""
+    """One compiled program: the app/mix axis is the sharded batch axis."""
 
-    def one(trace: Trace):
+    def one(trace):
         views, outs = run_frontend(cfg, TraceFrontend(
             trace, cfg.workload_config()))
         return dict({k: views[k] for k in VIEW_KEYS},
                     progress=outs.progress)
 
     return sharded_vmap(one)
+
+
+def _runtime_windows(progress, target, pos0=None):
+    """Per-stream completion from a (..., W, n_cores) progress history.
+
+    Args:
+        progress: per-window per-core cursor positions.
+        target: (..., n_cores) per-core access counts (0 = idle).
+        pos0: (..., n_cores) per-core phase offsets (cursor start);
+            extrapolation measures replay rate from here, not from 0,
+            so an offset core's head start is not counted as progress.
+    Returns:
+        ``(runtime_windows, done)`` per core: the 1-based window at
+        which the core's stream completed, extrapolated from the final
+        replay rate when it did not; idle cores report 0 windows.
+    """
+    if pos0 is None:
+        pos0 = np.zeros_like(target)
+    W = progress.shape[-2]
+    done = progress >= target[..., None, :]          # (..., W, N)
+    any_done = done.any(axis=-2)
+    first_done = np.where(any_done, done.argmax(axis=-2) + 1, W)
+    advanced = np.maximum(progress[..., -1, :] - pos0, 1)
+    est = W * (target - pos0) / advanced
+    rt = np.where(any_done, first_done, est).astype(np.float64)
+    return np.where(target > 0, rt, 0.0), any_done | (target == 0)
 
 
 def replay_suite(cfg: StageConfig, traces: Trace) -> dict:
@@ -61,26 +95,95 @@ def replay_suite(cfg: StageConfig, traces: Trace) -> dict:
         plus ``runtime_ms`` / ``runtime_windows`` / ``done`` /
         ``progress_final`` per application.
     """
+    wcfg = cfg.workload_config()
+    # per-core regions must stay below the chase-probe region (bit 31):
+    # with two sockets (48 cores) large footprints can reach it
+    fmax = int(np.max(np.asarray(jax.device_get(traces.footprint_lines))))
+    if wcfg.n_cores * fmax > 1 << 31:
+        raise ValueError(
+            f"{wcfg.n_cores} cores x footprint {fmax} lines overflows "
+            f"the 2^31-line traffic address space (the chase-probe "
+            f"region starts at bit 31); shrink the footprint")
+
     out = jax.device_get(_replay_fn(cfg)(traces))
-    progress = out.pop("progress")                   # (A, W)
+    progress = np.asarray(out.pop("progress"))       # (A, W, n_cores)
     length = np.asarray(jax.device_get(traces.length))  # (A,)
     out = {k: np.asarray(v) for k, v in out.items()}
-
-    W = progress.shape[1]
-    done = progress >= length[:, None]
-    any_done = done.any(axis=1)
-    first_done = np.where(any_done, done.argmax(axis=1) + 1, W)
-    # unfinished apps: extrapolate from the achieved replay rate
-    final = np.maximum(progress[:, -1], 1)
-    est = W * length / final
-    runtime_windows = np.where(any_done, first_done, est)
+    cid = np.arange(wcfg.n_cores)
+    target = np.where(cid[None, :] < wcfg.n_traffic,
+                      length[:, None], 0)             # (A, n_cores)
+    rt, done = _runtime_windows(progress, target)
+    traffic = cid < wcfg.n_traffic
+    # the app finishes when its slowest core does (lockstep in solo mode)
+    runtime_windows = rt[:, traffic].max(axis=1)
 
     cpu = cfg.platform.cpu
     window_ms = cpu.window_cycles * cpu.cpu_ps_per_clk * 1e-9
-    out["done"] = any_done
-    out["runtime_windows"] = runtime_windows.astype(np.float64)
+    out["done"] = done[:, traffic].all(axis=1)
+    out["runtime_windows"] = runtime_windows
     out["runtime_ms"] = runtime_windows * window_ms
-    out["progress_final"] = progress[:, -1]
+    out["progress_final"] = progress[:, -1, :][:, traffic].min(axis=1)
+    return out
+
+
+def replay_mix(cfg: StageConfig, mix: TraceMix) -> dict:
+    """Replay one multiprogrammed mix; per-app and per-core results.
+
+    Args:
+        cfg: the stage configuration; ``cfg.n_sockets`` must match the
+            mix's core count (24 cores per socket).
+        mix: an unbatched `TraceMix` (`assign_traces`).
+    Returns:
+        The whole-platform views (scalars keyed by `VIEW_KEYS`) plus
+        ``app_runtime_ms`` / ``app_runtime_windows`` / ``app_done``
+        arrays indexed by app id, and the per-core
+        ``core_runtime_windows`` / ``core_done`` they reduce from.
+    """
+    batched = jax.tree_util.tree_map(lambda a: a[None], mix)
+    out = replay_mixes(cfg, batched)
+    return jax.tree_util.tree_map(lambda a: a[0], out)
+
+
+def replay_mixes(cfg: StageConfig, mixes: TraceMix) -> dict:
+    """Replay a stack of mixes (leading mix axis, device-sharded).
+
+    Args:
+        cfg: the stage configuration (one compiled program).
+        mixes: a `TraceMix` batch from `stack_mixes`; all mixes share
+            the platform's core count.
+    Returns:
+        Host-side dict: views (M,), per-core arrays (M, n_cores), and
+        per-app arrays (M, A) where A is the largest app count across
+        the batch (`nan` / False padding for mixes with fewer apps).
+    """
+    out = jax.device_get(_replay_fn(cfg)(mixes))
+    progress = np.asarray(out.pop("progress"))       # (M, W, n_cores)
+    out = {k: np.asarray(v) for k, v in out.items()}
+    target = np.asarray(jax.device_get(mixes.length))   # (M, n_cores)
+    app_id = np.asarray(jax.device_get(mixes.app_id))   # (M, n_cores)
+    pos0 = np.asarray(jax.device_get(mixes.pos0))       # (M, n_cores)
+
+    rt, done = _runtime_windows(progress, target, pos0)
+    cpu = cfg.platform.cpu
+    window_ms = cpu.window_cycles * cpu.cpu_ps_per_clk * 1e-9
+
+    M = app_id.shape[0]
+    n_apps = int(app_id.max()) + 1 if app_id.size else 0
+    app_rt = np.full((M, n_apps), np.nan)
+    app_done = np.zeros((M, n_apps), bool)
+    for m in range(M):
+        for a in range(n_apps):
+            cores = app_id[m] == a
+            if cores.any():
+                # an app finishes when its slowest core does
+                app_rt[m, a] = rt[m, cores].max()
+                app_done[m, a] = done[m, cores].all()
+
+    out["core_runtime_windows"] = rt
+    out["core_done"] = done
+    out["app_runtime_windows"] = app_rt
+    out["app_runtime_ms"] = app_rt * window_ms
+    out["app_done"] = app_done
     return out
 
 
@@ -93,7 +196,8 @@ def replay_stages(stages, traces: Trace, preset: str | None = None,
         traces: stacked `Trace` batch (leading application axis).
         preset: optional device preset applied to every named stage.
         **overrides: `StageConfig` field overrides applied to every
-            named stage (window-count knobs for CI-speed vs full runs).
+            named stage (window-count knobs for CI-speed vs full runs,
+            ``n_sockets=2`` for a two-socket frontend, ...).
     Returns:
         ``{stage_name: replay_suite(...)}``.
     """

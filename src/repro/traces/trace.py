@@ -22,6 +22,12 @@ applications stacks to a leading batch axis and replays under one
 ``jax.vmap``-ed compile.  Arrays are padded by at least one bound-phase
 slice beyond ``length`` so windowed `dynamic_slice` reads never clamp
 into valid data.
+
+A solo `Trace` is sharded data-parallel across the traffic cores (a
+multi-threaded kernel); its multiprogrammed sibling is
+`repro.traces.mix.TraceMix` — a per-core trace batch built from
+`Trace`s by `assign_traces` (see docs/WORKLOADS.md for the authoring
+guide).
 """
 from __future__ import annotations
 

@@ -29,7 +29,6 @@ def mk_queue(entries):
             fbank=q.fbank.at[c, i].set(e["fbank"]),
             row=q.row.at[c, i].set(e["row"]),
             is_chase=q.is_chase.at[c, i].set(0),
-            core=q.core.at[c, i].set(0),
         )
     return q
 

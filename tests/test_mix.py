@@ -1,0 +1,242 @@
+"""Multiprogrammed per-core replay: mixes, phase offsets, two sockets."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import get_stage
+from repro.core.workload import WorkloadConfig
+from repro.traces import (assign_traces, make_trace, mix_stats, replay_mix,
+                          split_cores, stack_mixes)
+from repro.traces.kernels import gups, pointer_chase, stream
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+FAST = dict(windows=16, warmup=4)
+
+
+# ----------------------------------------------------------- construction
+
+def test_assign_traces_builds_per_core_batch():
+    a = make_trace(np.ones(100), np.zeros(100), np.zeros(100), 1 << 12)
+    b = make_trace(np.full(50, 2), np.ones(50), np.zeros(50), 1 << 10)
+    mix = assign_traces([a, b], [0, 0, 1, -1])
+    assert mix.n_cores == 4
+    assert list(np.asarray(mix.length)) == [100, 100, 50, 0]
+    assert list(np.asarray(mix.footprint_lines)) == [1 << 12, 1 << 12,
+                                                     1 << 10, 1]
+    assert list(np.asarray(mix.app_id)) == [0, 0, 1, -1]
+    assert int(mix.region_lines) == 1 << 12    # max footprint
+    # per-core streams: padded to a common static shape
+    assert mix.delta.shape == (4, mix.n_slots)
+    assert (np.asarray(mix.delta)[2, :50] == 2).all()
+    assert (np.asarray(mix.is_write)[2, :50] == 1).all()
+    st = mix_stats(mix)
+    assert st["cores_per_app"] == {0: 2, 1: 1}
+    assert st["idle_cores"] == 1
+
+
+def test_assign_traces_validates():
+    t = make_trace([1], [0], [0], 64)
+    with pytest.raises(ValueError):
+        assign_traces([t], [0, 0])                 # chase core not idle
+    with pytest.raises(ValueError):
+        assign_traces([t], [1, -1])                # app index out of range
+    with pytest.raises(ValueError):
+        assign_traces([t], [-1, -1])               # app 0 unassigned
+    with pytest.raises(ValueError):
+        assign_traces([t], [0, -1], phase_offsets=[0])   # wrong length
+
+
+def test_phase_offsets_shift_cursor_and_line_cum():
+    deltas = np.arange(1, 65)
+    t = make_trace(deltas, np.zeros(64), np.zeros(64), 1 << 10)
+    mix = assign_traces([t], [0, 0, -1], phase_offsets=[0, 10, 0])
+    assert list(np.asarray(mix.pos0)) == [0, 10, 0]
+    # the offset core's running delta sum matches a from-zero core's
+    # value at the same position (int32 semantics)
+    assert int(mix.line_cum0[1]) == int(
+        np.asarray(deltas[:10], np.int32).sum(dtype=np.int32))
+    # offsets beyond the stream clip to its length
+    clipped = assign_traces([t], [0, -1], phase_offsets=[500, 0])
+    assert int(clipped.pos0[0]) == 64
+
+
+def test_split_cores_even_blocks():
+    asn = split_cores(3, 24)
+    assert len(asn) == 24 and asn[-1] == -1
+    counts = [asn.count(a) for a in range(3)]
+    assert sum(counts) == 23 and max(counts) - min(counts) <= 1
+    # blocks are contiguous (producer/consumer neighbourhoods)
+    assert asn[:-1] == sorted(asn[:-1])
+    with pytest.raises(ValueError):
+        split_cores(24, 24)
+
+
+# ------------------------------------------------------------- semantics
+
+def test_offset_core_finishes_earlier():
+    """A core starting mid-stream consumes fewer accesses, so its
+    completion window comes first; both replay the same addresses."""
+    t = make_trace(np.ones(512), np.zeros(512), np.zeros(512), 1 << 12)
+    cfg = get_stage("03-ps-clock", **FAST)
+    mix = assign_traces([t], [0] * 23 + [-1],
+                        phase_offsets=[0] * 22 + [256, 0])
+    out = replay_mix(cfg, mix)
+    rt = out["core_runtime_windows"]
+    assert out["core_done"].all()
+    assert rt[22] < rt[0]                      # half the stream left
+    assert (rt[:22] == rt[0]).all()            # lockstep otherwise
+
+
+def test_mix_apps_match_solo_runtimes_below_knee():
+    """Acceptance: two distinct traces on disjoint core sets under
+    hbm2e reproduce their solo runtimes within 2% when total demand
+    stays below the device knee."""
+    A, B = stream(n=1536), gups(n=1536)
+    cfg = get_stage("04-model-correct", preset="hbm2e",
+                    windows=40, warmup=8)
+    aA = [0] * 8 + [-1] * 16                   # A alone on cores 0-7
+    aB = [-1] * 12 + [0] * 8 + [-1] * 4        # B alone on cores 12-19
+    aAB = [0] * 8 + [-1] * 4 + [1] * 8 + [-1] * 4
+    soloA = replay_mix(cfg, assign_traces([A], aA))
+    soloB = replay_mix(cfg, assign_traces([B], aB))
+    both = replay_mix(cfg, assign_traces([A, B], aAB))
+    assert both["app_done"].all()
+    for i, solo in enumerate((soloA, soloB)):
+        assert solo["app_done"][0]
+        rel = abs(both["app_runtime_windows"][i]
+                  / solo["app_runtime_windows"][0] - 1)
+        assert rel <= 0.02, (i, both["app_runtime_windows"],
+                             solo["app_runtime_windows"])
+
+
+def test_mix_contention_slows_latency_bound_app():
+    """The multiprogrammed regime the shared-cursor frontend could not
+    express: a streaming neighbour inflates the latency-bound app's
+    in-mix runtime well beyond its isolated runtime."""
+    S, C = stream(n=2048), pointer_chase(n=128)
+    cfg = get_stage("04-model-correct", windows=48, warmup=8)
+    alone = replay_mix(cfg, assign_traces(
+        [C], [-1] * 11 + [0] * 12 + [-1]))
+    mixed = replay_mix(cfg, assign_traces(
+        [S, C], [0] * 11 + [1] * 12 + [-1]))
+    assert alone["app_done"][0] and mixed["app_done"][1]
+    assert (mixed["app_runtime_windows"][1]
+            > 1.5 * alone["app_runtime_windows"][0])
+
+
+def test_stack_mixes_batches_and_validates():
+    t1 = make_trace(np.ones(64), np.zeros(64), np.zeros(64), 256)
+    t2 = make_trace(np.ones(200), np.zeros(200), np.zeros(200), 256)
+    m1 = assign_traces([t1], [0, 0, -1])
+    m2 = assign_traces([t2], [0, -1, -1])
+    batch = stack_mixes([m1, m2])
+    assert batch.delta.shape[0] == 2
+    assert batch.delta.shape[-1] == m2.n_slots
+    with pytest.raises(ValueError):
+        stack_mixes([m1, assign_traces([t1], [0, -1])])
+
+
+# ------------------------------------------------------------ two sockets
+
+def test_socket_geometry_properties():
+    one = WorkloadConfig()
+    two = WorkloadConfig(n_sockets=2)
+    assert (one.n_cores, one.n_traffic, one.chase_core) == (24, 23, 23)
+    assert (two.n_cores, two.n_traffic, two.chase_core) == (48, 47, 47)
+
+
+def test_second_socket_lifts_hbm2e_frontend_ceiling():
+    """Acceptance: 47 traffic cores push HBM2e past the ~200 GB/s
+    single-socket frontend ceiling (>300 GB/s demand served)."""
+    import jax.numpy as jnp
+    from repro.core import run_point
+
+    bw = {}
+    for ns in (1, 2):
+        cfg = get_stage("04-model-correct", preset="hbm2e", n_sockets=ns,
+                        **FAST)
+        v = run_point(cfg, jnp.int32(64), jnp.int32(0))
+        bw[ns] = float(v["sim_bw_gbs"])
+    assert bw[1] < 210                         # the documented ceiling
+    assert bw[2] > 300
+
+
+def test_partitioned_channel_ownership_splits_sockets():
+    """Partitioned mode confines each socket to its channel half; the
+    platform still serves traffic from both sockets."""
+    import jax.numpy as jnp
+    from repro.core import run_point
+
+    cfg = get_stage("03-ps-clock", preset="hbm2e", n_sockets=2,
+                    socket_channels="partitioned", **FAST)
+    v = run_point(cfg, jnp.int32(32), jnp.int32(0))
+    assert float(v["sim_bw_gbs"]) > 150
+    assert cfg.workload_config().socket_channels == "partitioned"
+
+
+def test_two_socket_mix_replay():
+    """A 48-core mix replays with per-app runtimes on both sockets."""
+    A, B = stream(n=512), gups(n=512)
+    cfg = get_stage("03-ps-clock", preset="hbm2e", n_sockets=2,
+                    windows=32, warmup=4)
+    asn = [0] * 24 + [1] * 23 + [-1]           # one app per socket
+    out = replay_mix(cfg, assign_traces([A, B], asn))
+    assert out["app_runtime_windows"].shape == (2,)
+    assert out["app_done"].all()
+    assert out["sim_bw_gbs"] > 0
+
+
+# ------------------------------------------------- sharded bit-identity
+
+_SHARD_SCRIPT = textwrap.dedent("""
+    import jax, jax.numpy as jnp, numpy as np
+    assert jax.device_count() == 4, jax.devices()
+    from repro.core import get_stage
+    from repro.core.platform import run_frontend
+    from repro.core.shard import sharded_vmap
+    from repro.traces import assign_traces, split_cores, stack_mixes
+    from repro.traces.frontend import TraceFrontend
+    from repro.traces.kernels import gups, pointer_chase, stream
+    from repro.traces.replay import VIEW_KEYS
+
+    cfg = get_stage("03-ps-clock", windows=6, warmup=2)
+    def one(mix):
+        views, outs = run_frontend(cfg, TraceFrontend(
+            mix, cfg.workload_config()))
+        return dict({k: views[k] for k in VIEW_KEYS},
+                    progress=outs.progress)
+
+    apps = [stream(n=256), gups(n=256), pointer_chase(n=128)]
+    mixes = stack_mixes([
+        assign_traces(apps[:2], split_cores(2, 24)),
+        assign_traces(apps[1:], split_cores(2, 24)),
+        assign_traces([apps[0], apps[2]], split_cores(2, 24),
+                      phase_offsets=[0] * 12 + [64] * 11 + [0]),
+    ])
+    sharded = jax.device_get(sharded_vmap(one, n_devices=4)(mixes))
+    single = jax.device_get(sharded_vmap(one, n_devices=1)(mixes))
+    for k in single:
+        a, b = np.asarray(sharded[k]), np.asarray(single[k])
+        assert a.shape == b.shape, k
+        assert (a == b).all(), (k, a, b)     # BIT-identical, not approx
+    print("OK")
+""")
+
+
+def test_sharded_mix_axis_bit_identical():
+    """Acceptance: the per-core (mix) batch axis shards across devices
+    bit-identically to the single-device vmap path."""
+    env = dict(os.environ,
+               XLA_FLAGS=(os.environ.get("XLA_FLAGS", "")
+                          + " --xla_force_host_platform_device_count=4"),
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=SRC + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    proc = subprocess.run([sys.executable, "-c", _SHARD_SCRIPT],
+                          capture_output=True, text=True, env=env,
+                          timeout=600)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "OK" in proc.stdout
