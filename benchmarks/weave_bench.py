@@ -1,0 +1,149 @@
+"""Dense vs event-horizon weave engine: the tracked perf trajectory.
+
+Times the *compiled* stage-10 Mess sweep under both weave engines
+(``StageConfig.weave``) and records, per device preset:
+
+* wall-clock per simulated window (compile excluded: the sweep runs
+  twice and the second, steady-state run is reported);
+* scan steps per window — the dense engine's ``ticks_per_window`` vs
+  the event engine's static budget (`clocking.event_budget`), i.e. the
+  *compiled* scan lengths that bound the work per window;
+* per-pace evaluated events per window and budget-saturation counts
+  (``weave_events`` / ``weave_sat`` views) — how much headroom the
+  budget has before graceful degradation would kick in.
+
+Artifact: ``reports/benchmarks/BENCH_weave.json`` — the first
+benchmark artifact meant to be *diffed across PRs*, so weave-engine
+regressions show up as numbers, not vibes.  The README perf table is
+generated from it (``python -m benchmarks.weave_bench --readme``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.util import OUT_DIR, emit
+from repro.core import get_stage, sweep
+from repro.core.platform import run_point
+
+STAGE = "10-delay-buffer"
+SMOKE = dict(windows=16, warmup=4, presets=("ddr4_2666",),
+             paces=(2, 8, 24), mixes=(0,))
+FULL = dict(windows=48, warmup=16,
+            presets=("ddr4_2666", "ddr5_4800", "hbm2e"),
+            paces=(1, 2, 4, 8, 12, 16, 24, 48, 64), mixes=(0, 16))
+
+REPORT = os.path.join(OUT_DIR, "BENCH_weave.json")
+
+
+def _time_sweep(cfg, paces, mixes):
+    """Steady-state sweep wall-clock (second run; first compiles)."""
+    sweep(cfg, paces=paces, write_mixes=mixes)
+    t0 = time.perf_counter()
+    sweep(cfg, paces=paces, write_mixes=mixes)
+    return time.perf_counter() - t0
+
+
+def _event_diag(cfg, paces):
+    """Per-pace evaluated events/window + saturated windows (compiled)."""
+    fn = jax.jit(jax.vmap(lambda p: run_point(cfg, p, jnp.int32(0))))
+    out = jax.device_get(fn(jnp.asarray(paces, jnp.int32)))
+    span = cfg.windows - cfg.warmup
+    return {
+        str(p): dict(
+            events_per_window=round(float(out["weave_events"][i]) / span, 1),
+            sat_windows=int(out["weave_sat"][i]))
+        for i, p in enumerate(paces)
+    }
+
+
+def bench_preset(preset: str, windows: int, warmup: int, paces, mixes):
+    base = get_stage(STAGE, preset=preset, windows=windows, warmup=warmup)
+    cfg_d = dataclasses.replace(base, weave="dense")
+    cfg_e = dataclasses.replace(base, weave="event")
+    clock = base.clock()
+    n_windows = len(paces) * len(mixes) * windows
+
+    wall_d = _time_sweep(cfg_d, paces, mixes)
+    wall_e = _time_sweep(cfg_e, paces, mixes)
+    row = dict(
+        ticks_per_window=clock.ticks_per_window_static,
+        event_budget=base.event_budget(),
+        step_reduction=round(
+            clock.ticks_per_window_static / base.event_budget(), 2),
+        dense_wall_s=round(wall_d, 3),
+        event_wall_s=round(wall_e, 3),
+        speedup=round(wall_d / wall_e, 2),
+        us_per_window=dict(
+            dense=round(wall_d / n_windows * 1e6, 1),
+            event=round(wall_e / n_windows * 1e6, 1)),
+        paces=_event_diag(cfg_e, paces),
+    )
+    emit(f"weave.{preset}", wall_e / n_windows * 1e6,
+         f"speedup={row['speedup']}x vs dense; "
+         f"steps/window {base.event_budget()} vs "
+         f"{clock.ticks_per_window_static} "
+         f"({row['step_reduction']}x fewer)")
+    return row
+
+
+def main(full: bool = False, preset: str | None = None):
+    knobs = dict(FULL if full else SMOKE)
+    if preset:
+        knobs["presets"] = (preset,)
+    presets = {
+        p: bench_preset(p, knobs["windows"], knobs["warmup"],
+                        knobs["paces"], knobs["mixes"])
+        for p in knobs["presets"]
+    }
+    report = dict(
+        mode="full" if full else "smoke",
+        stage=STAGE,
+        windows=knobs["windows"],
+        paces=list(knobs["paces"]),
+        write_mixes=list(knobs["mixes"]),
+        device=jax.devices()[0].platform,
+        presets=presets,
+    )
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(REPORT, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    return report
+
+
+def readme_table(report: dict | None = None) -> str:
+    """The README perf table, rendered from BENCH_weave.json."""
+    if report is None:
+        with open(REPORT) as f:
+            report = json.load(f)
+    lines = [
+        "| preset | scan steps/window (dense → event) | compiled sweep "
+        "wall-clock (dense → event) | speedup |",
+        "|--------|------------------------------------|----------------"
+        "------------------------|---------|",
+    ]
+    for name, row in report["presets"].items():
+        lines.append(
+            f"| `{name}` | {row['ticks_per_window']} → "
+            f"{row['event_budget']} ({row['step_reduction']}× fewer) | "
+            f"{row['dense_wall_s']} s → {row['event_wall_s']} s | "
+            f"**{row['speedup']}×** |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--readme" in sys.argv:
+        print(readme_table())
+    else:
+        main(full="--full" in sys.argv,
+             preset=next((a.split("=", 1)[1] for a in sys.argv
+                          if a.startswith("--preset=")), None))

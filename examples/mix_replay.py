@@ -52,8 +52,10 @@ def main():
 
     # ---- 2. the second traffic socket on HBM2e -------------------------
     for n_sockets in (1, 2):
+        # a max-pace saturation probe: pin the dense weave oracle (the
+        # event engine's budget binds past the knee and would flag it)
         cfg = get_stage("04-model-correct", preset="hbm2e", windows=16,
-                        warmup=4, n_sockets=n_sockets)
+                        warmup=4, n_sockets=n_sockets, weave="dense")
         v = run_point(cfg, jnp.int32(64), jnp.int32(0))
         print(f"hbm2e @ pace 64, {n_sockets} socket(s): "
               f"{float(v['sim_bw_gbs']):.0f} GB/s served "

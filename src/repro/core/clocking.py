@@ -50,6 +50,10 @@ class ClockModel:
     c2t_num: int
     c2t_den: int
     c2t_round: int = 0
+    #: static scan length of the event-horizon weave engine (steps per
+    #: window); derived from bus occupancy by `make_clock` — see
+    #: `event_budget`.  Always <= ticks_per_window_static.
+    events_per_window_static: int = 0
 
     def window_start_tick(self, w):
         """First DRAM tick of window ``w`` (exact, integer)."""
@@ -90,6 +94,37 @@ class ClockModel:
         return self.window_end_tick(w) - self.window_start_tick(w)
 
 
+def event_budget(ticks: int, dram) -> int:
+    """Static event-scan length for one window of ``ticks`` DRAM ticks.
+
+    The event-horizon weave engine evaluates `repro.core.dram.tick`
+    only at ticks where eligibility can change, so its scan length is
+    bounded by how many *commands* a window can physically carry, not
+    by the tick count:
+
+    * **CAS slots** — the data bus fits at most ``ticks // tBL``
+      bursts per channel per window, and cross-channel CAS ticks
+      coalesce (one evaluated tick serves every channel) because
+      request arrivals are windowed bursts;
+    * **refresh** — ``ranks * (ticks // tREFI + 1)`` deadlines (the
+      staggered per-rank grid is shared by all channels);
+    * **headroom** — ACT/PRE interleave, arrival bursts, and drain
+      settles: ``max(32, ticks // 16)``.
+
+    The budget is clamped to ``ticks`` (the event engine can never
+    need more steps than the dense scan).  When offered traffic pushes
+    past what the budget covers, the engine saturates *gracefully*:
+    remaining events spill into the next window and the window is
+    flagged (`WindowOut` diagnostics / ``weave_sat`` in the views) —
+    never silently wrong.  `StageConfig.weave_events` overrides this
+    derivation.
+    """
+    cas_slots = ticks // dram.tBL
+    refresh = dram.ranks_per_channel * (ticks // max(dram.tREFI, 1) + 1)
+    headroom = max(32, ticks // 16)
+    return min(ticks, cas_slots + refresh + headroom)
+
+
 def make_clock(mode: str,
                platform: PlatformParams = DEFAULT_PLATFORM) -> ClockModel:
     cpu = platform.cpu
@@ -100,13 +135,16 @@ def make_clock(mode: str,
         return ClockModel(mode, cp, dp, wc,
                           ticks_per_window_static=wc,
                           tick_to_cpu_ps_num=cp, tick_to_cpu_ps_den=1,
-                          c2t_num=1, c2t_den=1)
+                          c2t_num=1, c2t_den=1,
+                          events_per_window_static=event_budget(wc, dram))
     if mode == "damov_ceil":
         r = platform.freq_ratio_ceil            # ceil(2.1/1.333) = 2
         return ClockModel(mode, cp, dp, wc,
                           ticks_per_window_static=wc // r,
                           tick_to_cpu_ps_num=cp * r, tick_to_cpu_ps_den=1,
-                          c2t_num=1, c2t_den=r)
+                          c2t_num=1, c2t_den=r,
+                          events_per_window_static=event_budget(
+                              wc // r, dram))
     if mode == "picosecond":
         # Listing 1b: dram ticks while dramPs < cpuPs.
         # tick(cycle) = floor(cycle*476 / 750); max ticks/window = 636.
@@ -115,7 +153,8 @@ def make_clock(mode: str,
         return ClockModel(mode, cp, dp, wc,
                           ticks_per_window_static=tmax,
                           tick_to_cpu_ps_num=dp, tick_to_cpu_ps_den=1,
-                          c2t_num=cp, c2t_den=dp, c2t_round=dp - 1)
+                          c2t_num=cp, c2t_den=dp, c2t_round=dp - 1,
+                          events_per_window_static=event_budget(tmax, dram))
     raise ValueError(f"unknown clock mode {mode!r}; one of {CLOCK_MODES}")
 
 

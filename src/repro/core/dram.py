@@ -28,10 +28,12 @@ module is the pure-jnp reference semantics (`ref.py` delegates here).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.timing import DramParams
 
@@ -39,6 +41,38 @@ from repro.core.timing import DramParams
 NONE, RD, WR, ACT, PRE = 0, 1, 2, 3, 4
 
 _BIG = jnp.int32(1 << 28)
+
+
+class BankPlanes(NamedTuple):
+    """Loop-invariant index planes of one device geometry.
+
+    These are pure functions of `DramParams` (never of simulation
+    state), so they are built **once** per device — host-side numpy, so
+    they embed as XLA constants — instead of being re-derived with
+    ``jnp.arange`` on every `tick` / `next_event` trace.  Both weave
+    engines (the dense per-tick scan and the event-horizon scan) share
+    one instance via `bank_planes`.
+    """
+
+    cidx: np.ndarray          # (C,)  channel index
+    rank_of: np.ndarray       # (RB,) rank of each flat bank
+    grp_of: np.ndarray        # (RB,) bank group of each flat bank
+    bank_in_rank: np.ndarray  # (RB,) bank index within its rank
+
+
+@functools.lru_cache(maxsize=None)
+def bank_planes(dram: DramParams) -> BankPlanes:
+    """The precomputed `BankPlanes` of one device (cached per preset)."""
+    C = dram.n_channels
+    RB = dram.banks_per_channel
+    nbanks = dram.banks_per_rank
+    bank = np.arange(RB, dtype=np.int32)
+    return BankPlanes(
+        cidx=np.arange(C, dtype=np.int32),
+        rank_of=bank // nbanks,
+        grp_of=(bank % nbanks) // dram.banks_per_group,
+        bank_in_rank=bank % nbanks,
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,20 +128,36 @@ class BankState(NamedTuple):
 
 
 class TickStats(NamedTuple):
-    """One tick's completion statistics.
+    """One tick's completion statistics, **per channel** ``(C,)``.
 
     Latency units differ by view on purpose: ``sum_rd_lat_ticks`` is
     DRAM ticks (view ① — multiply by ``dram_ps_per_clk`` for time),
     ``sum_if_lat_ps`` is CPU-perceived picoseconds (view ② — already
     crossed the clock domain).
+
+    The fields are per-channel vectors (a channel issues at most one
+    command per tick) and are *accumulated in time order per channel*
+    by the weave loops.  That makes the float32 ``sum_if_lat_ps``
+    window total bit-identical between the dense and event engines:
+    idle ticks contribute exact ``+0.0`` (the float32 identity), so
+    both engines fold the same non-zero values in the same order.
     """
 
-    served_rd: jnp.ndarray         # scalar int32
+    served_rd: jnp.ndarray         # (C,) int32
     served_wr: jnp.ndarray
     sum_rd_lat_ticks: jnp.ndarray  # simulator view: completion - arrival
     sum_if_lat_ps: jnp.ndarray     # interface view (CPU-domain), float32
     chase_rd: jnp.ndarray
     sum_chase_lat_ticks: jnp.ndarray
+
+
+def zero_stats(dram: DramParams) -> TickStats:
+    """A zeroed per-channel `TickStats` accumulator."""
+    zi = jnp.zeros((dram.n_channels,), jnp.int32)
+    return TickStats(served_rd=zi, served_wr=zi, sum_rd_lat_ticks=zi,
+                     sum_if_lat_ps=jnp.zeros((dram.n_channels,),
+                                             jnp.float32),
+                     chase_rd=zi, sum_chase_lat_ticks=zi)
 
 
 def init_queue(dram: DramParams, policy: SchedulerPolicy,
@@ -128,7 +178,12 @@ def init_queue(dram: DramParams, policy: SchedulerPolicy,
 
 
 def init_banks(dram: DramParams) -> BankState:
-    """All banks precharged, refresh deadlines staggered across ranks."""
+    """All banks precharged, refresh deadlines staggered across ranks.
+
+    Also builds (and caches) the device's `BankPlanes` — the
+    loop-invariant index planes both weave engines gather against.
+    """
+    bank_planes(dram)            # warm the per-device plane cache
     C = dram.n_channels
     RB = dram.banks_per_channel
     R = dram.ranks_per_channel
@@ -159,53 +214,62 @@ def _gather(bank_field, fbank):
 def tick(queue: QueueState, banks: BankState, t, *,
          dram: DramParams, policy: SchedulerPolicy,
          tick2cpu_num: int, tick2cpu_den: int, cpu_ps_per_clk: int,
-         active=True):
+         active=True, planes: BankPlanes | None = None):
     """Advance the memory system by one DRAM tick.
 
     Args:
         queue, banks: current `QueueState` / `BankState`.
-        t: current DRAM tick (int32, traced).
+        t: current DRAM tick (int32, traced) — a scalar, or a
+            per-channel ``(C,)`` vector (channels are fully decoupled
+            inside a window, which is what lets the event-horizon
+            engine advance each channel along its own event times).
         dram, policy: static device timings + controller flavor.
         tick2cpu_num, tick2cpu_den: DRAM tick -> CPU-perceived
             picoseconds under the active clock model
             (``cpu_ps = tick * num // den``).
         cpu_ps_per_clk: CPU picoseconds per CPU cycle (476 for 2.1 GHz).
         active: gates windows whose static tick budget exceeds the
-            clock model's exact tick count (inactive ticks are no-ops).
+            clock model's exact tick count (inactive ticks are no-ops);
+            scalar or per-channel ``(C,)``, like ``t``.
+        planes: the device's precomputed `BankPlanes`; defaults to the
+            cached `bank_planes(dram)`.
 
     Returns:
         ``(queue', banks', TickStats)``.  Latencies in `TickStats` are
         DRAM ticks (simulator view) and picoseconds (interface view).
     """
     C = dram.n_channels
-    RB = dram.banks_per_channel
     nbanks = dram.banks_per_rank
-    cidx = jnp.arange(C)
+    if planes is None:
+        planes = bank_planes(dram)
+    cidx = planes.cidx
+    t = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (C,))
+    active = jnp.broadcast_to(jnp.asarray(active), (C,))
+    t_r = t[:, None]                    # against (C, R) / (C, RB) / (C, Q)
 
     # ---- refresh ----------------------------------------------------
     # All-bank (DDR4/HBM2e): close the whole rank, block it for tRFC.
     # Same-bank (DDR5 REFsb): block only the rotating target bank for
     # tRFCsb; the rest of the rank keeps serving.
-    ref_due = active & (t >= banks.next_ref)                    # (C, R)
+    ref_due = active[:, None] & (t_r >= banks.next_ref)         # (C, R)
     refmask = jnp.repeat(ref_due, nbanks, axis=1)               # (C, RB)
     if dram.same_bank_refresh:
-        bank_in_rank = jnp.arange(RB, dtype=jnp.int32) % nbanks
         target = jnp.repeat(banks.ref_slot, nbanks, axis=1)     # (C, RB)
-        refmask = refmask & (bank_in_rank[None, :] == target)
+        refmask = refmask & (planes.bank_in_rank[None, :] == target)
         ref_slot = jnp.where(ref_due, (banks.ref_slot + 1) % nbanks,
                              banks.ref_slot)
     else:
         ref_slot = banks.ref_slot
     open_row = jnp.where(refmask, -1, banks.open_row)
     next_act = jnp.where(refmask,
-                         jnp.maximum(banks.next_act, t + dram.tRFC),
+                         jnp.maximum(banks.next_act, t_r + dram.tRFC),
                          banks.next_act)
     next_ref = jnp.where(ref_due, banks.next_ref + dram.tREFI, banks.next_ref)
     banks = banks._replace(open_row=open_row, next_act=next_act,
                            next_ref=next_ref, ref_slot=ref_slot)
 
     # ---- write-drain hysteresis --------------------------------------
-    arrived = (queue.valid == 1) & (queue.arrival <= t)         # (C, Q)
+    arrived = (queue.valid == 1) & (queue.arrival <= t_r)       # (C, Q)
     nw = jnp.sum(arrived & (queue.is_write == 1), axis=1)       # (C,)
     nr = jnp.sum(arrived & (queue.is_write == 0), axis=1)
     drain = jnp.where(banks.drain, nw > policy.drain_lo, nw >= policy.drain_hi)
@@ -224,27 +288,28 @@ def tick(queue: QueueState, banks: BankState, t, *,
     closed = open_e < 0
     is_wr = queue.is_write == 1
     bus_ok = (t >= banks.bus_free)[:, None]
-    faw_ok_rank = t >= banks.faw[:, :, 0] + dram.tFAW           # (C, R)
+    faw_ok_rank = t_r >= banks.faw[:, :, 0] + dram.tFAW         # (C, R)
     faw_ok_e = jnp.take_along_axis(faw_ok_rank, rank_e, axis=1)
     drain_c = drain[:, None]
 
     # During a drain the channel is dedicated to writes; outside it,
     # to reads (standard watermark write-buffering).
     side_ok = jnp.where(is_wr, drain_c, ~drain_c)
-    elig_rd = (arrived & ~is_wr & row_hit & (t >= nrd_e) & bus_ok
+    elig_rd = (arrived & ~is_wr & row_hit & (t_r >= nrd_e) & bus_ok
                & (t >= banks.wtr_until)[:, None] & ~drain_c)
-    elig_wr = (arrived & is_wr & row_hit & (t >= nwr_e) & bus_ok
+    elig_wr = (arrived & is_wr & row_hit & (t_r >= nwr_e) & bus_ok
                & (t >= banks.rtw_until)[:, None] & drain_c)
-    elig_act = arrived & closed & (t >= nact_e) & faw_ok_e & side_ok
+    elig_act = arrived & closed & (t_r >= nact_e) & faw_ok_e & side_ok
 
     # FR-FCFS guard: don't precharge a row that still has pending hits
     # *on the active side* — during a write drain only write hits count
     # (a pending read hit must not block the drain's precharges, or the
     # drain can never finish and the channel deadlocks).
-    hit_pend = jnp.zeros((C, RB), bool).at[cidx[:, None], queue.fbank].max(
+    hit_pend = jnp.zeros(
+        (C, dram.banks_per_channel), bool).at[cidx[:, None], queue.fbank].max(
         arrived & row_hit & (is_wr == drain_c))
     hit_pend_e = _gather(hit_pend, queue.fbank)
-    elig_pre = (arrived & ~closed & ~row_hit & (t >= npre_e)
+    elig_pre = (arrived & ~closed & ~row_hit & (t_r >= npre_e)
                 & ~hit_pend_e & side_ok)
 
     # ---- FR-FCFS priority: CAS > ACT > PRE, oldest-first --------------
@@ -258,7 +323,7 @@ def tick(queue: QueueState, banks: BankState, t, *,
         capped = (banks.hit_streak >= policy.row_hit_cap)[:, None]
         score = jnp.where(capped & (elig_rd | elig_wr), 1 * _BIG + age, score)
         score = jnp.where(capped & elig_act, 3 * _BIG + age, score)
-    score = jnp.where(active, score, 0)
+    score = jnp.where(active[:, None], score, 0)
 
     sel = jnp.argmax(score, axis=1)                             # (C,)
     sel_score = jnp.take_along_axis(score, sel[:, None], 1)[:, 0]
@@ -295,16 +360,15 @@ def tick(queue: QueueState, banks: BankState, t, *,
     bsel = (cidx, s_fb)
 
     # ACT
-    grp = (jnp.arange(RB) % nbanks) // dram.banks_per_group     # (RB,)
-    same_rank = (jnp.arange(RB) // nbanks)[None, :] == s_rank[:, None]
-    same_grp = (grp[None, :] == s_bg[:, None]) & same_rank
+    same_rank = planes.rank_of[None, :] == s_rank[:, None]
+    same_grp = (planes.grp_of[None, :] == s_bg[:, None]) & same_rank
     open_row = banks.open_row.at[bsel].set(
         jnp.where(s_act, s_row, banks.open_row[bsel]))
     nact = jnp.where(s_act[:, None] & same_rank,
-                     jnp.maximum(banks.next_act, t + dram.tRRD_S),
+                     jnp.maximum(banks.next_act, t_r + dram.tRRD_S),
                      banks.next_act)
     nact = jnp.where(s_act[:, None] & same_grp,
-                     jnp.maximum(nact, t + dram.tRRD_L), nact)
+                     jnp.maximum(nact, t_r + dram.tRRD_L), nact)
     nact = nact.at[bsel].set(
         jnp.where(s_act, jnp.maximum(nact[bsel], t + dram.tRC), nact[bsel]))
     nrd = banks.next_rd.at[bsel].set(
@@ -315,7 +379,9 @@ def tick(queue: QueueState, banks: BankState, t, *,
         jnp.where(s_act, t + dram.tRAS, banks.next_pre[bsel]))
     # FAW shift-register push
     faw_new = jnp.concatenate(
-        [banks.faw[:, :, 1:], jnp.full_like(banks.faw[:, :, :1], t)], axis=2)
+        [banks.faw[:, :, 1:],
+         jnp.broadcast_to(t[:, None, None], banks.faw[:, :, :1].shape)],
+        axis=2)
     act_rank = jax.nn.one_hot(s_rank, dram.ranks_per_channel,
                               dtype=bool) & s_act[:, None]
     faw = jnp.where(act_rank[:, :, None], faw_new, banks.faw)
@@ -326,8 +392,8 @@ def tick(queue: QueueState, banks: BankState, t, *,
     bus_free = jnp.where(s_cas, t + burst, banks.bus_free)
     last_rank = jnp.where(s_cas, s_rank, banks.last_rank)
     ccd = jnp.where(same_grp, dram.tCCD_L, dram.tCCD_S)
-    nrd = jnp.where(s_cas[:, None], jnp.maximum(nrd, t + ccd), nrd)
-    nwr = jnp.where(s_cas[:, None], jnp.maximum(nwr, t + ccd), nwr)
+    nrd = jnp.where(s_cas[:, None], jnp.maximum(nrd, t_r + ccd), nrd)
+    nwr = jnp.where(s_cas[:, None], jnp.maximum(nwr, t_r + ccd), nwr)
     npre = npre.at[bsel].set(jnp.where(
         s_rd, jnp.maximum(npre[bsel], t + dram.tRTP),
         jnp.where(s_wr, jnp.maximum(npre[bsel],
@@ -365,11 +431,128 @@ def tick(queue: QueueState, banks: BankState, t, *,
     if_lat_ps = (done_t * tick2cpu_num // tick2cpu_den
                  - s_issue * cpu_ps_per_clk).astype(jnp.float32)
     stats = TickStats(
-        served_rd=jnp.sum(s_rd.astype(jnp.int32)),
-        served_wr=jnp.sum(s_wr.astype(jnp.int32)),
-        sum_rd_lat_ticks=jnp.sum(jnp.where(s_rd, rd_lat, 0)),
-        sum_if_lat_ps=jnp.sum(jnp.where(s_rd, if_lat_ps, 0.0)),
-        chase_rd=jnp.sum((s_rd & s_chase).astype(jnp.int32)),
-        sum_chase_lat_ticks=jnp.sum(jnp.where(s_rd & s_chase, rd_lat, 0)),
+        served_rd=s_rd.astype(jnp.int32),
+        served_wr=s_wr.astype(jnp.int32),
+        sum_rd_lat_ticks=jnp.where(s_rd, rd_lat, 0),
+        sum_if_lat_ps=jnp.where(s_rd, if_lat_ps, 0.0),
+        chase_rd=(s_rd & s_chase).astype(jnp.int32),
+        sum_chase_lat_ticks=jnp.where(s_rd & s_chase, rd_lat, 0),
     )
     return queue, banks, stats
+
+
+def next_event(queue: QueueState, banks: BankState, t, end, *,
+               dram: DramParams, policy: SchedulerPolicy,
+               planes: BankPlanes | None = None):
+    """The exact event horizon: earliest tick > ``t`` where `tick` can act.
+
+    Evaluated on the *post-tick* state at ``t``, this returns — **per
+    channel** — the smallest tick at which that channel's behaviour can
+    differ from a no-op; the event-driven weave engine jumps each
+    channel straight there (`tick` couples channels only through the
+    window-level stats reduction, never through state, so per-channel
+    time vectors are exact).  Every dense tick strictly between
+    ``t[c]`` and the returned tick is provably a no-op for channel
+    ``c``: no request arrives, no refresh deadline passes, no command
+    becomes issuable, and the write-drain hysteresis sits at its fixed
+    point.  The candidates, all exact (never early, never late):
+
+    * **arrival** — the min ``arrival`` over valid not-yet-visible
+      entries (visibility changes the drain counts and FR-FCFS pool);
+    * **drain settle** — ``t + 1`` whenever one application of the
+      write-drain hysteresis would flip the channel's ``drain`` flag
+      (the dense scan re-evaluates it every tick; between arrivals and
+      retirements one application reaches the fixed point, so a single
+      forced step is exact);
+    * **CAS** — per arrived row-hit entry on the active drain side:
+      ``max(next_rd|next_wr, bus_free, wtr_until|rtw_until)``;
+    * **ACT** — per arrived closed-bank entry on the active side:
+      ``max(next_act, FAW expiry of its rank)``;
+    * **PRE** — per arrived row-conflict entry on the active side with
+      no pending same-side row hits: ``next_pre``;
+    * **refresh** — the channel's min ``next_ref`` deadline.
+
+    Scheduling *priority* (FR-FCFS score, row-hit caps) never needs a
+    candidate: it picks among issuable commands but cannot create one.
+
+    Args:
+        queue, banks: post-`tick` state at ``t``.
+        t: the tick just evaluated — scalar or per-channel ``(C,)``
+            (int32, traced).
+        end: static scan horizon (``window start + ticks_per_window``);
+            results are clamped into ``[t + 1, end]`` — ``end`` means
+            "no event on this channel before the horizon".
+    dram, policy: static device timings + controller flavor.
+        planes: the device's precomputed `BankPlanes`; defaults to the
+            cached `bank_planes(dram)`.
+
+    Returns:
+        ``(C,)`` int32 per-channel next-event ticks in ``[t + 1, end]``.
+    """
+    nbanks = dram.banks_per_rank
+    if planes is None:
+        planes = bank_planes(dram)
+    cidx = planes.cidx
+    t = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (dram.n_channels,))
+    t_r = t[:, None]
+
+    valid = queue.valid == 1
+    arrived = valid & (queue.arrival <= t_r)                    # (C, Q)
+    is_wr = queue.is_write == 1
+
+    # ---- candidate: next request arrival ------------------------------
+    pending = valid & (queue.arrival > t_r)
+    ev = jnp.min(jnp.where(pending, queue.arrival, _BIG), axis=1)
+
+    # ---- the drain side the scheduler holds until the next event ------
+    # One application of the hysteresis reaches its fixed point under a
+    # frozen arrived set (see `tick`); eligibility below must use that
+    # settled side, and if settling changes the stored flag the dense
+    # scan acts on it at t+1 — force a step there.
+    nw = jnp.sum(arrived & is_wr, axis=1)                       # (C,)
+    nr = jnp.sum(arrived & ~is_wr, axis=1)
+    drain = jnp.where(banks.drain, nw > policy.drain_lo,
+                      nw >= policy.drain_hi)
+    drain = drain | ((nr == 0) & (nw > 0))
+    ev = jnp.minimum(ev, jnp.where(drain != banks.drain, t + 1, _BIG))
+    drain_c = drain[:, None]
+
+    # ---- per-entry command readiness ----------------------------------
+    open_e = _gather(banks.open_row, queue.fbank)
+    rank_e = queue.fbank // nbanks
+    row_hit = open_e == queue.row
+    closed = open_e < 0
+    side_ok = jnp.where(is_wr, drain_c, ~drain_c)
+
+    # CAS: bank CAS timer + shared bus + write/read turnaround
+    cas_ready = jnp.where(
+        is_wr,
+        jnp.maximum(_gather(banks.next_wr, queue.fbank),
+                    banks.rtw_until[:, None]),
+        jnp.maximum(_gather(banks.next_rd, queue.fbank),
+                    banks.wtr_until[:, None]))
+    cas_ready = jnp.maximum(cas_ready, banks.bus_free[:, None])
+    ev = jnp.minimum(ev, jnp.min(jnp.where(
+        arrived & row_hit & side_ok, cas_ready, _BIG), axis=1))
+
+    # ACT: bank ACT timer + the rank's FAW sliding-window expiry
+    faw_ready = banks.faw[:, :, 0] + dram.tFAW                  # (C, R)
+    act_ready = jnp.maximum(_gather(banks.next_act, queue.fbank),
+                            jnp.take_along_axis(faw_ready, rank_e, axis=1))
+    ev = jnp.minimum(ev, jnp.min(jnp.where(
+        arrived & closed & side_ok, act_ready, _BIG), axis=1))
+
+    # PRE: row conflict with no pending same-side hits on the bank
+    hit_pend = jnp.zeros(
+        (dram.n_channels, dram.banks_per_channel),
+        bool).at[cidx[:, None], queue.fbank].max(
+        arrived & row_hit & (is_wr == drain_c))
+    elig_pre = (arrived & ~closed & ~row_hit & side_ok
+                & ~_gather(hit_pend, queue.fbank))
+    ev = jnp.minimum(ev, jnp.min(jnp.where(
+        elig_pre, _gather(banks.next_pre, queue.fbank), _BIG), axis=1))
+
+    # ---- candidate: refresh deadlines ---------------------------------
+    ev = jnp.minimum(ev, jnp.min(banks.next_ref, axis=1))
+
+    return jnp.clip(ev, t + 1, end)

@@ -66,6 +66,16 @@ class StageConfig:
     l_ir_init_cycles: float = 1.0     # DAMOV immediate-response latency
     windows: int = 96
     warmup: int = 32
+    #: weave engine: ``"event"`` (default) scans a static *event budget*
+    #: per window, jumping straight to the next tick where eligibility
+    #: can change (`dram.next_event`) — bit-identical to ``"dense"``,
+    #: the reference one-tick-per-step scan, as long as the budget
+    #: covers the window's events (saturation is reported in the
+    #: ``weave_sat`` view, never silent).
+    weave: str = "event"
+    #: event-scan steps per window; 0 derives the budget from bus
+    #: occupancy (`clocking.event_budget`).
+    weave_events: int = 0
     #: traffic sockets: each adds 24 frontend cores (one shared chase
     #: probe overall).  2 sockets double the frontend issue capacity —
     #: required to drive HBM2e past the single-socket ~200 GB/s ceiling.
@@ -76,8 +86,17 @@ class StageConfig:
     platform: PlatformParams = dataclasses.field(
         default_factory=lambda: DEFAULT_PLATFORM)
 
+    def __post_init__(self):
+        if self.weave not in ("dense", "event"):
+            raise ValueError(
+                f"weave must be 'dense' or 'event', got {self.weave!r}")
+
     def clock(self) -> ClockModel:
         return make_clock(self.clock_mode, self.platform)
+
+    def event_budget(self) -> int:
+        """Event-scan steps per window (override or clock-derived)."""
+        return self.weave_events or self.clock().events_per_window_static
 
     def noc_model(self) -> NocModel:
         return make_noc(self.noc)
@@ -124,21 +143,70 @@ def _window_step(cfg: StageConfig, clock: ClockModel, wcfg: WorkloadConfig,
     # weave phase: cycle-accurate DRAM simulation of this window's ticks
     start = clock.window_start_tick(w)
     end = clock.window_end_tick(w)
+    planes = dram.bank_planes(cfg.platform.dram)
     tick_fn = functools.partial(
         dram.tick, dram=cfg.platform.dram, policy=cfg.policy,
         tick2cpu_num=clock.tick_to_cpu_ps_num,
         tick2cpu_den=clock.tick_to_cpu_ps_den,
-        cpu_ps_per_clk=cpu.cpu_ps_per_clk)
+        cpu_ps_per_clk=cpu.cpu_ps_per_clk, planes=planes)
 
-    def body(qb, i):
-        q, b = qb
-        t = start + i
-        q, b, st = tick_fn(q, b, t, active=t < end)
-        return (q, b), st
+    # Stats accumulate (C,)-per-channel in the scan *carry*, in time
+    # order per channel — idle ticks add exact zeros (the float32
+    # identity), so window totals are bit-identical across engines.
+    acc0 = dram.zero_stats(cfg.platform.dram)
+    tree_add = functools.partial(jax.tree_util.tree_map, jnp.add)
 
-    (queue, banks), st = jax.lax.scan(
-        body, (queue, banks),
-        jnp.arange(clock.ticks_per_window_static, dtype=jnp.int32))
+    if cfg.weave == "dense":
+        # reference engine: one scan step per DRAM tick
+        def body(qba, i):
+            q, b, acc = qba
+            t = start + i
+            q, b, s = tick_fn(q, b, t, active=t < end)
+            return (q, b, tree_add(acc, s)), None
+
+        (queue, banks, st), _ = jax.lax.scan(
+            body, (queue, banks, acc0),
+            jnp.arange(clock.ticks_per_window_static, dtype=jnp.int32))
+        weave_events = end - start
+        weave_sat = jnp.zeros((), bool)
+    else:
+        # event-horizon engine: each step jumps every channel to its
+        # own next tick where eligibility can change (`dram.next_event`
+        # is per-channel-exact; `dram.tick` couples channels only
+        # through the stats reduction) and applies `tick` there.  A
+        # channel whose events are exhausted (tn == horizon) parks at
+        # horizon-1 with `active=False`, which freezes its state just
+        # like the dense scan's inactive tail ticks.
+        horizon = start + clock.ticks_per_window_static
+        nev_fn = functools.partial(
+            dram.next_event, dram=cfg.platform.dram, policy=cfg.policy,
+            planes=planes)
+        t0 = jnp.full((cfg.platform.dram.n_channels,), 1, jnp.int32)
+
+        def ebody(qbta, i):
+            q, b, t, acc = qbta
+            tn = nev_fn(q, b, t, horizon)               # (C,)
+            live = tn < horizon
+            tau = jnp.minimum(tn, horizon - 1)
+            q, b, s = tick_fn(q, b, tau, active=live & (tau < end))
+            return (q, b, tau, tree_add(acc, s)), tn < end
+
+        (queue, banks, t_last, st), live = jax.lax.scan(
+            ebody, (queue, banks, t0 * (start - 1), acc0),
+            jnp.arange(cfg.event_budget(), dtype=jnp.int32))
+        # the binding constraint is the busiest channel's event count
+        weave_events = jnp.max(jnp.sum(live.astype(jnp.int32), axis=0))
+        # budget exhausted with events still pending anywhere before
+        # the static horizon: spilled events replay next window
+        # (graceful) and the window is flagged — never silent.  The
+        # check runs against `horizon`, not `end`: a pending *tail*
+        # event (an arrival in [end, horizon)) carries a drain-
+        # hysteresis update the dense scan's inactive ticks would have
+        # applied, so skipping it must flag too, or the sat=0 =>
+        # bit-identical contract (relied on by `mess._run_mix` and
+        # `traces.replay._replay_exact`) would leak a silent
+        # divergence into the next window.
+        weave_sat = jnp.any(nev_fn(queue, banks, t_last, horizon) < horizon)
 
     n_rd = jnp.sum(st.served_rd)
     sum_if = jnp.sum(st.sum_if_lat_ps)
@@ -169,7 +237,11 @@ def _window_step(cfg: StageConfig, clock: ClockModel, wcfg: WorkloadConfig,
         app_lat_cycles=app_lat_cycles, l_ir=l_ir_next,
         injected=injected, ticks=end - start,
         progress=frontend.progress(fstate))
-    return (queue, banks, fstate, l_ir_next, lat_est), out
+    # weave-engine diagnostics ride next to WindowOut (not inside it, so
+    # the per-window trajectory stays bit-identical across engines):
+    # evaluated event ticks this window + the budget-saturation flag.
+    diag = dict(weave_events=weave_events, weave_sat=weave_sat)
+    return (queue, banks, fstate, l_ir_next, lat_est), (out, diag)
 
 
 def run_frontend(cfg: StageConfig, frontend):
@@ -204,9 +276,10 @@ def run_frontend(cfg: StageConfig, frontend):
         * cfg.platform.dram.dram_ps_per_clk, jnp.float32)
 
     step = functools.partial(_window_step, cfg, clock, wcfg, frontend)
-    _, outs = jax.lax.scan(step, (queue, banks, fstate, l_ir0, lat_est0),
-                           jnp.arange(cfg.windows, dtype=jnp.int32))
-    return _aggregate(cfg, outs), outs
+    _, (outs, diag) = jax.lax.scan(
+        step, (queue, banks, fstate, l_ir0, lat_est0),
+        jnp.arange(cfg.windows, dtype=jnp.int32))
+    return _aggregate(cfg, outs, diag), outs
 
 
 def run_point(cfg: StageConfig, pace, wr_num):
@@ -229,7 +302,7 @@ def run_point(cfg: StageConfig, pace, wr_num):
     return views
 
 
-def _aggregate(cfg: StageConfig, outs: WindowOut):
+def _aggregate(cfg: StageConfig, outs: WindowOut, diag=None):
     """Post-warmup aggregation of the three views.
 
     Units: bandwidths GB/s; latencies ns.  View ① (simulator) counts
@@ -254,6 +327,16 @@ def _aggregate(cfg: StageConfig, outs: WindowOut):
     sim_ps = ticks * cfg.platform.dram.dram_ps_per_clk
 
     nz = jnp.maximum(n_rd, 1).astype(jnp.float32)
+    # weave-engine diagnostics: evaluated event ticks post-warmup and
+    # the count of budget-saturated windows (anywhere in the run —
+    # warmup saturation perturbs the converged state too).  The dense
+    # engine reports its active tick count and never saturates.
+    if diag is None:
+        weave_events = ticks.astype(jnp.int32)
+        weave_sat = jnp.zeros((), jnp.int32)
+    else:
+        weave_events = ksum(diag["weave_events"])
+        weave_sat = jnp.sum(diag["weave_sat"].astype(jnp.int32))
     # bytes/ps -> GB/s is a factor of 1e3 (1e12 ps/s over 1e9 B/GB)
     return dict(
         # ① memory-simulator view (DRAM's own clock domain, from the MC)
@@ -275,4 +358,5 @@ def _aggregate(cfg: StageConfig, outs: WindowOut):
             * (cfg.platform.dram.dram_ps_per_clk * 1e-3)
             / jnp.maximum(ksum(outs.chase_rd), 1).astype(jnp.float32),
         injected=ksum(outs.injected),
+        weave_events=weave_events, weave_sat=weave_sat,
     )

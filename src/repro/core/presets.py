@@ -138,3 +138,28 @@ def stage_for(stage: str, preset: str = "ddr4_2666", **overrides):
     from repro.core.stages import get_stage
 
     return get_stage(stage, preset=preset, **overrides)
+
+
+def weave_budgets(preset: str) -> dict:
+    """Per-clock-mode weave scan lengths of one device preset.
+
+    The event-horizon weave engine replaces the dense
+    one-step-per-DRAM-tick scan with a static *event budget* derived
+    from bus occupancy (`repro.core.clocking.event_budget`); the
+    budget is a device property as much as a clock one — burst length
+    (tBL), refresh cadence, and tick period all enter.  Returns
+    ``{clock_mode: (ticks_per_window, events_per_window)}`` — e.g. the
+    DDR4 picosecond model scans 635 ticks dense vs 199 events
+    (3.2x fewer steps), DDR5-4800's BL16 bursts push the ratio past
+    5x.  Used by benchmarks and docs to report the per-preset step
+    reduction.
+    """
+    from repro.core.clocking import CLOCK_MODES, make_clock
+
+    plat = platform_for(preset)
+    out = {}
+    for mode in CLOCK_MODES:
+        clock = make_clock(mode, plat)
+        out[mode] = (clock.ticks_per_window_static,
+                     clock.events_per_window_static)
+    return out

@@ -48,7 +48,7 @@ def _unpad_batch(tree, n: int):
     return jax.tree_util.tree_map(lambda a: a[:n], tree)
 
 
-def sharded_vmap(fn, n_devices: int | None = None):
+def sharded_vmap(fn, n_devices: int | None = None, donate: bool = False):
     """``vmap(fn)`` over the leading axis, sharded across devices.
 
     Args:
@@ -57,6 +57,15 @@ def sharded_vmap(fn, n_devices: int | None = None):
         n_devices: devices to shard over; defaults to all available.
             With one device this is exactly ``jax.vmap(fn)`` (no mesh,
             no padding) — the CPU fallback path.
+        donate: donate the batched input buffers to the computation
+            (``jax.jit(..., donate_argnums=0)``): XLA may alias them
+            into outputs/scratch instead of holding a live copy per
+            point, cutting per-point device copies and peak memory on
+            large sweep batches.  The caller's input arrays are
+            **consumed** — only pass ``True`` for buffers that are
+            rebuilt per call (see `repro.core.mess.sweep`) or
+            explicitly handed over (`repro.traces.replay`'s
+            ``donate=`` entry points).
     Returns:
         A jitted function ``batched(tree) -> tree_out`` whose leading
         output axis matches the input batch length.  Results are
@@ -66,14 +75,15 @@ def sharded_vmap(fn, n_devices: int | None = None):
     if nd > device_count():
         raise ValueError(f"n_devices={nd} exceeds the "
                          f"{device_count()} available devices")
+    dn = (0,) if donate else ()
     if nd <= 1:
-        return jax.jit(jax.vmap(fn))
+        return jax.jit(jax.vmap(fn), donate_argnums=dn)
 
     mesh = Mesh(jax.devices()[:nd], (BATCH_AXIS,))
     spec = PartitionSpec(BATCH_AXIS)
     mapped = _shard_map(jax.vmap(fn), mesh=mesh,
                         in_specs=spec, out_specs=spec)
-    jitted = jax.jit(mapped)
+    jitted = jax.jit(mapped, donate_argnums=dn)
 
     @functools.wraps(fn)
     def batched(tree):

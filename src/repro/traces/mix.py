@@ -66,7 +66,8 @@ class TraceMix(NamedTuple):
 
 
 def assign_traces(traces: Sequence[Trace], assignment: Sequence[int],
-                  phase_offsets: Sequence[int] | None = None) -> TraceMix:
+                  phase_offsets: Sequence[int] | None = None,
+                  wrap: bool = True) -> TraceMix:
     """Build a `TraceMix` from an app list and a per-core assignment.
 
     Args:
@@ -76,9 +77,19 @@ def assign_traces(traces: Sequence[Trace], assignment: Sequence[int],
             24 per socket); -1 marks an idle core.  The chase-probe
             core (the last one) must be idle.
         phase_offsets: optional per-core start offsets into the
-            assigned stream (accesses, clipped to the trace length);
-            cores of one app at different offsets model
-            producer/consumer stagger.  Default: all zero.
+            assigned stream (accesses); cores of one app at different
+            offsets model producer/consumer stagger.  Default: all
+            zero.
+        wrap: with ``True`` (default) an offset core replays the
+            *rotated* stream ``[off, length) ++ [0, off)`` — the
+            steady-state-pipeline model: every core replays the full
+            ``length`` accesses regardless of its offset, and offsets
+            are taken modulo the trace length.  The wrapped tail
+            continues the running delta sum past the end of the stream,
+            exactly as a looping replay would.  With ``False`` the
+            offset core plays the truncated suffix ``[off, length)``
+            (offsets clipped to the length) — the one-shot model, where
+            an offset core finishes earlier.
     Returns:
         A `TraceMix` padded to one static shape: per-core arrays of
         length ``max(trace length) + CAP_DEMAND`` (the windowed
@@ -122,8 +133,18 @@ def assign_traces(traces: Sequence[Trace], assignment: Sequence[int],
         dep[c, :t.dep.shape[0]] = t.dep
         length[c] = n
         footprint[c] = int(t.footprint_lines)
-        off = min(max(int(phase_offsets[c]), 0), n)
-        pos0[c] = off
+        if wrap:
+            # steady-state pipeline: rotate the stream so the cursor
+            # starts at 0 and the core replays all n accesses
+            off = int(phase_offsets[c]) % n if n else 0
+            if off:
+                for dst, src in ((delta, t.delta), (is_write, t.is_write),
+                                 (dep, t.dep)):
+                    dst[c, :n] = np.concatenate([src[off:n], src[:off]])
+            pos0[c] = 0
+        else:
+            off = min(max(int(phase_offsets[c]), 0), n)
+            pos0[c] = off
         # int32 wraparound on purpose: matches the frontend's running
         # line_cum, so an offset core addresses the same lines a
         # from-zero core would at the same position

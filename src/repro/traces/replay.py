@@ -45,16 +45,44 @@ VIEW_KEYS = ("sim_bw_gbs", "sim_lat_ns", "if_bw_gbs", "if_lat_ns",
 
 
 @functools.lru_cache(maxsize=None)
-def _replay_fn(cfg: StageConfig):
+def _replay_fn(cfg: StageConfig, donate: bool = False):
     """One compiled program: the app/mix axis is the sharded batch axis."""
 
     def one(trace):
         views, outs = run_frontend(cfg, TraceFrontend(
             trace, cfg.workload_config()))
         return dict({k: views[k] for k in VIEW_KEYS},
-                    progress=outs.progress)
+                    weave_sat=views["weave_sat"], progress=outs.progress)
 
-    return sharded_vmap(one)
+    return sharded_vmap(one, donate=donate)
+
+
+def _replay_exact(cfg: StageConfig, batch, donate: bool) -> dict:
+    """Replay a batch, re-running event-budget-saturated rows dense.
+
+    Under the default event weave engine, a row whose windows exhaust
+    the static event budget (``weave_sat`` — the exact divergence
+    detector) is replayed through the dense reference engine, so the
+    returned results are bit-identical to an all-dense replay no
+    matter how hot the workload runs.  With ``donate=True`` the input
+    buffers are consumed by the first pass, so the fallback is
+    unavailable — saturated rows stay flagged in ``weave_sat`` for the
+    caller to handle (pre-verify the regime, or keep the default
+    ``donate=False``).
+    """
+    out = jax.device_get(_replay_fn(cfg, donate)(batch))
+    out = {k: np.array(v) for k, v in out.items()}
+    sat = np.flatnonzero(out["weave_sat"] > 0)
+    if sat.size and cfg.weave == "event" and not donate:
+        import dataclasses
+
+        cfg_dense = dataclasses.replace(cfg, weave="dense")
+        sub = jax.tree_util.tree_map(lambda a: a[sat], batch)
+        fixed = jax.device_get(_replay_fn(cfg_dense, False)(sub))
+        for k, v in fixed.items():
+            if k != "weave_sat":           # keep the diagnostic flag
+                out[k][sat] = np.asarray(v)
+    return out
 
 
 def _runtime_windows(progress, target, pos0=None):
@@ -83,19 +111,28 @@ def _runtime_windows(progress, target, pos0=None):
     return np.where(target > 0, rt, 0.0), any_done | (target == 0)
 
 
-def replay_suite(cfg: StageConfig, traces: Trace) -> dict:
+def replay_suite(cfg: StageConfig, traces: Trace,
+                 donate: bool = False) -> dict:
     """Replay a stacked trace batch through one stage; host-side dict.
 
     Args:
         cfg: the stage configuration (clock model, policy, platform).
         traces: a `Trace` with a leading application axis
             (see `stack_traces`); the axis is sharded across devices.
+        donate: donate the trace buffers to the compiled replay
+            (`repro.core.shard.sharded_vmap`), cutting per-point device
+            copies / peak memory for fleet-scale batches.  The batch is
+            **consumed** — pass ``True`` only when it is not replayed
+            again (e.g. single-stage runs; `replay_stages` reuses the
+            batch across stages and must keep the default).
     Returns:
         Numpy arrays keyed by `VIEW_KEYS` (bandwidth GB/s, latency ns)
         plus ``runtime_ms`` / ``runtime_windows`` / ``done`` /
         ``progress_final`` per application.
     """
     wcfg = cfg.workload_config()
+    # host-side fields first: after a donating call the buffers are gone
+    length = np.asarray(jax.device_get(traces.length))  # (A,)
     # per-core regions must stay below the chase-probe region (bit 31):
     # with two sockets (48 cores) large footprints can reach it
     fmax = int(np.max(np.asarray(jax.device_get(traces.footprint_lines))))
@@ -105,9 +142,8 @@ def replay_suite(cfg: StageConfig, traces: Trace) -> dict:
             f"the 2^31-line traffic address space (the chase-probe "
             f"region starts at bit 31); shrink the footprint")
 
-    out = jax.device_get(_replay_fn(cfg)(traces))
+    out = _replay_exact(cfg, traces, donate)
     progress = np.asarray(out.pop("progress"))       # (A, W, n_cores)
-    length = np.asarray(jax.device_get(traces.length))  # (A,)
     out = {k: np.asarray(v) for k, v in out.items()}
     cid = np.arange(wcfg.n_cores)
     target = np.where(cid[None, :] < wcfg.n_traffic,
@@ -144,24 +180,27 @@ def replay_mix(cfg: StageConfig, mix: TraceMix) -> dict:
     return jax.tree_util.tree_map(lambda a: a[0], out)
 
 
-def replay_mixes(cfg: StageConfig, mixes: TraceMix) -> dict:
+def replay_mixes(cfg: StageConfig, mixes: TraceMix,
+                 donate: bool = False) -> dict:
     """Replay a stack of mixes (leading mix axis, device-sharded).
 
     Args:
         cfg: the stage configuration (one compiled program).
         mixes: a `TraceMix` batch from `stack_mixes`; all mixes share
             the platform's core count.
+        donate: donate the mix buffers to the compiled replay (the
+            batch is consumed — see `replay_suite`).
     Returns:
         Host-side dict: views (M,), per-core arrays (M, n_cores), and
         per-app arrays (M, A) where A is the largest app count across
         the batch (`nan` / False padding for mixes with fewer apps).
     """
-    out = jax.device_get(_replay_fn(cfg)(mixes))
-    progress = np.asarray(out.pop("progress"))       # (M, W, n_cores)
-    out = {k: np.asarray(v) for k, v in out.items()}
+    # host-side fields first: after a donating call the buffers are gone
     target = np.asarray(jax.device_get(mixes.length))   # (M, n_cores)
     app_id = np.asarray(jax.device_get(mixes.app_id))   # (M, n_cores)
     pos0 = np.asarray(jax.device_get(mixes.pos0))       # (M, n_cores)
+    out = _replay_exact(cfg, mixes, donate)
+    progress = np.asarray(out.pop("progress"))       # (M, W, n_cores)
 
     rt, done = _runtime_windows(progress, target, pos0)
     cpu = cfg.platform.cpu

@@ -39,7 +39,8 @@ def run_ticks(q, b, n, start=0):
         q, b, st = dram.tick(q, b, jnp.int32(t), dram=D, policy=POL,
                              tick2cpu_num=750, tick2cpu_den=1,
                              cpu_ps_per_clk=476)
-        served.append((t, int(st.served_rd), int(st.served_wr)))
+        # TickStats is per-channel (C,); reduce to per-tick totals
+        served.append((t, int(st.served_rd.sum()), int(st.served_wr.sum())))
     return q, b, served
 
 

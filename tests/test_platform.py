@@ -69,9 +69,15 @@ def test_unloaded_latency_hierarchy():
 
 def test_xor_mapping_restores_rw_gradient():
     """Fig. 6a: with the XOR mapping, write-heavy mixes saturate lower;
-    the simple mapping hides the gradient."""
-    xor_r = point("05-addrmap", pace=64, wr=0)
-    xor_w = point("05-addrmap", pace=64, wr=32)
+    the simple mapping hides the gradient.
+
+    Deep saturation at max pace is the regime where the event weave's
+    static budget binds (XOR traffic issues a command on ~60% of
+    ticks), so this direct `run_point` probe pins the dense reference
+    oracle — sweep users get the same exactness automatically via
+    `mess.sweep`'s knee routing + saturation fallback."""
+    xor_r = point("05-addrmap", pace=64, wr=0, weave="dense")
+    xor_w = point("05-addrmap", pace=64, wr=32, weave="dense")
     assert xor_w["sim_bw_gbs"] < 0.85 * xor_r["sim_bw_gbs"]
 
 
