@@ -42,6 +42,7 @@ from benchmarks.util import OUT_DIR, emit, preset_suffix
 from repro.core import get_stage
 from repro.core.presets import PRESET_ORDER
 from repro.core.workload import N_CORES_PER_SOCKET
+from repro.obs.telemetry import hist_percentiles
 from repro.traces import (anchor_mix_ms, anchor_suite_ms, assign_traces,
                           make_suite, mape, replay_mixes, replay_stages,
                           replay_suite, split_cores, stack_mixes,
@@ -60,6 +61,19 @@ MIXES = (
     ("bfs+spmv+stencil", ("bfs_frontier", "spmv", "stencil3d")),
 )
 MIX_STAGES = ("01-baseline", "10-delay-buffer")
+
+
+def _if_percentiles_ns(out, warmup: int, i: int):
+    """p50/p95/p99 of the CPU-perceived read latency for one batch row.
+
+    Reduced from the telemetry interface-view histogram
+    (``tele_hist_if_ps``, the log2-bucketed per-read latencies behind
+    ``sum_if_lat_ps``) — per-request percentiles next to the means the
+    MAPE columns summarize; the groundwork for the ROADMAP
+    LLM-serving per-request-percentile scenario.
+    """
+    hist = out["tele_hist_if_ps"][i, warmup:]          # (W', C, B)
+    return hist_percentiles(hist) * 1e-3               # ps -> ns
 
 
 def _suffix(preset: str, sockets: int) -> str:
@@ -87,7 +101,8 @@ def run_preset(preset: str, full: bool = False, stages=STAGES,
     t0 = time.perf_counter()
     results = replay_stages(stages, batch, preset=preset,
                             windows=knobs["windows"],
-                            warmup=knobs["warmup"], n_sockets=sockets)
+                            warmup=knobs["warmup"], n_sockets=sockets,
+                            telemetry=True)
     wall = time.perf_counter() - t0
     us = wall / (len(stages) * len(names)) * 1e6
 
@@ -98,6 +113,7 @@ def run_preset(preset: str, full: bool = False, stages=STAGES,
         err = mape(out["runtime_ms"], anchors)
         emit(f"app_validation.{mtag}.{stage}.mape_pct", us, f"{err:.1f}")
         for i, nm in enumerate(names):
+            p50, p95, p99 = _if_percentiles_ns(out, knobs["warmup"], i)
             rows.append(dict(
                 preset=preset, stage=stage, app=nm, sockets=sockets,
                 runtime_ms=f"{out['runtime_ms'][i]:.5f}",
@@ -105,6 +121,8 @@ def run_preset(preset: str, full: bool = False, stages=STAGES,
                 err_pct=f"{100 * (out['runtime_ms'][i] / anchors[i] - 1):.1f}",
                 sim_lat_ns=f"{out['sim_lat_ns'][i]:.1f}",
                 if_lat_ns=f"{out['if_lat_ns'][i]:.1f}",
+                if_p50_ns=f"{p50:.1f}", if_p95_ns=f"{p95:.1f}",
+                if_p99_ns=f"{p99:.1f}",
                 app_lat_ns=f"{out['app_lat_ns'][i]:.1f}",
                 sim_bw_gbs=f"{out['sim_bw_gbs'][i]:.1f}",
             ))
@@ -150,7 +168,8 @@ def run_mixes(preset: str, full: bool = False, stages=MIX_STAGES,
     rows, results = [], {}
     for stage in stages:
         cfg = get_stage(stage, preset=preset, windows=knobs["windows"],
-                        warmup=knobs["warmup"], n_sockets=sockets)
+                        warmup=knobs["warmup"], n_sockets=sockets,
+                        telemetry=True)
         t0 = time.perf_counter()
         out = replay_mixes(cfg, mix_batch)
         solo = replay_suite(cfg, stack_traces(solo_traces))
@@ -165,6 +184,7 @@ def run_mixes(preset: str, full: bool = False, stages=MIX_STAGES,
             err = mape(pred, anchors)
             emit(f"app_mix.{mtag}.{stage}.{mix_name}.mape_pct",
                  us, f"{err:.1f}")
+            p50, p95, p99 = _if_percentiles_ns(out, knobs["warmup"], m)
             for a, nm in enumerate(names):
                 rows.append(dict(
                     preset=preset, stage=stage, mix=mix_name, app=nm,
@@ -175,6 +195,8 @@ def run_mixes(preset: str, full: bool = False, stages=MIX_STAGES,
                     solo_runtime_ms=f"{solo_rt[nm]:.5f}",
                     solo_anchor_ms=f"{solo_anchor[nm]:.5f}",
                     mix_bw_gbs=f"{out['sim_bw_gbs'][m]:.1f}",
+                    mix_if_p50_ns=f"{p50:.1f}", mix_if_p95_ns=f"{p95:.1f}",
+                    mix_if_p99_ns=f"{p99:.1f}",
                 ))
     _write_csv(rows, f"app_validation_mix{_suffix(preset, sockets)}")
     return results

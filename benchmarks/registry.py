@@ -70,6 +70,11 @@ BENCHMARKS: dict[str, BenchSpec] = {s.name: s for s in (
               "multiprogrammed per-core trace mixes: per-app-in-mix "
               "runtime MAPE next to solo numbers (--mix mode)",
               ("app_validation_mix*.csv",), main_attr="main_mix"),
+    BenchSpec("perspectives", "benchmarks.perspectives",
+              "three-perspective divergence ladder: per-window rank "
+              "correlation of sim/if/app views across stages 01->10, "
+              "plus a Perfetto timeline of the final stage",
+              ("perspectives*.json",)),
     BenchSpec("weave", "benchmarks.weave_bench",
               "dense vs event-horizon weave engine: compiled sweep "
               "wall-clock, scan steps/window, event-budget headroom",

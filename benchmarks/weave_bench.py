@@ -51,16 +51,32 @@ def _time_sweep(cfg, paces, mixes):
 
 
 def _event_diag(cfg, paces):
-    """Per-pace evaluated events/window + saturated windows (compiled)."""
+    """Per-pace evaluated events/window, budget occupancy (events used
+    over the static budget — the headroom before graceful degradation),
+    and saturated windows (compiled).  Also fits a per-preset linear
+    model ``events/window ~ per_pace * pace + fixed`` — the measured
+    calibration `repro.core.mess.load_event_calibration` feeds into
+    `event_covers` routing (ROADMAP "event-engine tuning")."""
     fn = jax.jit(jax.vmap(lambda p: run_point(cfg, p, jnp.int32(0))))
     out = jax.device_get(fn(jnp.asarray(paces, jnp.int32)))
     span = cfg.windows - cfg.warmup
-    return {
+    budget = cfg.event_budget()
+    epw = [float(out["weave_events"][i]) / span for i in range(len(paces))]
+    diag = {
         str(p): dict(
-            events_per_window=round(float(out["weave_events"][i]) / span, 1),
+            events_per_window=round(epw[i], 1),
+            budget_occupancy=round(epw[i] / budget, 3),
             sat_windows=int(out["weave_sat"][i]))
         for i, p in enumerate(paces)
     }
+    # least-squares fit over the unsaturated points only (a saturated
+    # window truncates its event count at the budget, biasing the rate)
+    ok = [i for i, p in enumerate(paces) if not int(out["weave_sat"][i])]
+    fit = None
+    if len(ok) >= 2:
+        a, b = np.polyfit([paces[i] for i in ok], [epw[i] for i in ok], 1)
+        fit = dict(per_pace=round(float(a), 3), fixed=round(float(b), 1))
+    return diag, fit
 
 
 def bench_preset(preset: str, windows: int, warmup: int, paces, mixes):
@@ -72,6 +88,7 @@ def bench_preset(preset: str, windows: int, warmup: int, paces, mixes):
 
     wall_d = _time_sweep(cfg_d, paces, mixes)
     wall_e = _time_sweep(cfg_e, paces, mixes)
+    pace_diag, rate_fit = _event_diag(cfg_e, paces)
     row = dict(
         ticks_per_window=clock.ticks_per_window_static,
         event_budget=base.event_budget(),
@@ -83,7 +100,8 @@ def bench_preset(preset: str, windows: int, warmup: int, paces, mixes):
         us_per_window=dict(
             dense=round(wall_d / n_windows * 1e6, 1),
             event=round(wall_e / n_windows * 1e6, 1)),
-        paces=_event_diag(cfg_e, paces),
+        paces=pace_diag,
+        event_rate_fit=rate_fit,
     )
     emit(f"weave.{preset}", wall_e / n_windows * 1e6,
          f"speedup={row['speedup']}x vs dense; "

@@ -1,0 +1,33 @@
+"""Compute the three-perspective divergence report from the CLI.
+
+Thin wrapper over `benchmarks.perspectives`: replays one telemetry-on
+mix per correction-ladder stage, writes the divergence ladder
+(``reports/benchmarks/perspectives_<preset>.json``) and the final
+stage's Perfetto timeline, and prints the ladder table.
+
+Usage:
+    python scripts/perspectives.py [--full] [--preset=P] [--table]
+
+``--table`` only re-renders the saved report (no simulation) — the
+same path as ``scripts/reanalyze.py --report perspectives``.
+"""
+import os
+import sys
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+
+def main():
+    from benchmarks.perspectives import ladder_table, main as run
+
+    preset = next((a.split("=", 1)[1] for a in sys.argv
+                   if a.startswith("--preset=")), "ddr4_2666")
+    if "--table" not in sys.argv:
+        run(full="--full" in sys.argv, preset=preset)
+    print(ladder_table(preset=preset))
+
+
+if __name__ == "__main__":
+    main()

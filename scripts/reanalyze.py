@@ -8,6 +8,10 @@ roofline terms in place.
 the report artifacts each one owns — the same single registry
 (`benchmarks.registry`) that drives ``benchmarks/run.py``, so this
 script and the runner always agree on what exists.
+
+``--report perspectives [--preset P]`` re-renders the saved
+three-perspective divergence ladder (``perspectives*.json``) as a
+markdown table — reanalysis of the stored artifact, no simulation.
 """
 import glob
 import json
@@ -64,9 +68,24 @@ def list_benchmarks():
         print(f"{'':16s}   -> {reports}")
 
 
+def report(name: str):
+    """Render a saved report artifact (``--report <name>``)."""
+    if name == "perspectives":
+        from benchmarks.perspectives import ladder_table
+
+        preset = next((a.split("=", 1)[1] for a in sys.argv
+                       if a.startswith("--preset=")), "ddr4_2666")
+        print(ladder_table(preset=preset))
+        return
+    raise SystemExit(f"unknown report {name!r}; one of: perspectives")
+
+
 def main():
     if "--list-benchmarks" in sys.argv:
         list_benchmarks()
+        return
+    if "--report" in sys.argv:
+        report(sys.argv[sys.argv.index("--report") + 1])
         return
     root = os.path.join(_ROOT, "reports")
     pats = sys.argv[1:] or [os.path.join(root, "dryrun*", "*", "*.json")]

@@ -84,6 +84,16 @@ class ClockModel:
         """The memory simulator's own notion of time (always 750 ps)."""
         return tick * self.dram_ps_per_clk
 
+    def window_cpu_ps(self, w):
+        """CPU-clock picosecond timestamp of window ``w``'s start.
+
+        The wall-clock axis of exported timelines (`repro.obs.export`):
+        window boundaries are defined on the CPU clock, so every
+        per-window telemetry series shares this axis regardless of the
+        DRAM tick mapping.
+        """
+        return w * self.window_cycles * self.cpu_ps_per_clk
+
     def active_ticks_in_window(self, w):
         """Traced count of DRAM ticks belonging to window ``w``.
 

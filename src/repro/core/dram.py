@@ -42,6 +42,11 @@ NONE, RD, WR, ACT, PRE = 0, 1, 2, 3, 4
 
 _BIG = jnp.int32(1 << 28)
 
+#: log2 latency-histogram buckets: bucket ``b`` counts values in
+#: ``[2^b, 2^(b+1))``; 24 buckets cover 1 DRAM tick .. 16.7M ps
+#: (values past the top edge clip into the last bucket).
+N_HIST = 24
+
 
 class BankPlanes(NamedTuple):
     """Loop-invariant index planes of one device geometry.
@@ -160,6 +165,80 @@ def zero_stats(dram: DramParams) -> TickStats:
                      chase_rd=zi, sum_chase_lat_ticks=zi)
 
 
+class TickTele(NamedTuple):
+    """One tick's telemetry increments (the simulator-view counter
+    planes of ``repro.obs``), **per channel** ``(C,)`` unless noted.
+
+    Everything here is an *event count* or an *event-accounted time
+    integral* — never a per-tick state sample — so the planes
+    accumulate to identical window totals under the dense and the
+    event-horizon weave engines (the event engine evaluates exactly
+    the ticks where these events can occur).
+
+    Row-locality counters are derivable from the command mix by the
+    classical identity (each request retires with exactly one CAS):
+    ``hits = cas - act``, ``misses = act - pre``, ``conflicts = pre``
+    — see `repro.obs.telemetry.summarize` (refresh-forced re-ACTs can
+    make per-window ``hits`` dip negative; the reduction clamps and
+    documents this).
+    """
+
+    n_act: jnp.ndarray             # ACT commands issued
+    n_pre: jnp.ndarray             # PRE commands issued
+    n_cas_rd: jnp.ndarray          # read CAS (== TickStats.served_rd)
+    n_cas_wr: jnp.ndarray          # write CAS
+    n_ref: jnp.ndarray             # refresh events (per rank deadline)
+    drain_enter: jnp.ndarray       # write-drain service bursts entered
+    drain_ticks: jnp.ndarray       # drain service dwell (burst spans)
+    busy_ticks: jnp.ndarray        # (C, RB) row-open time, at row close
+    hist_rd_ticks: jnp.ndarray     # (C, N_HIST) read latency, DRAM ticks
+    hist_if_ps: jnp.ndarray        # (C, N_HIST) CPU-perceived read ps
+
+
+class TeleState(NamedTuple):
+    """Telemetry-only carry state (exists only with telemetry on).
+
+    Time integrals are accounted at *grant* events so both weave
+    engines agree exactly: ``opened_at`` remembers each bank's last
+    ACT tick (busy time is added when the row closes via PRE or
+    refresh); ``last_wr_t`` / ``wr_burst`` track the channel's current
+    write-CAS burst (drain dwell accrues at each write grant).
+    """
+
+    opened_at: jnp.ndarray         # (C, RB) int32 tick of last ACT
+    last_wr_t: jnp.ndarray         # (C,) int32 tick of last write CAS
+    wr_burst: jnp.ndarray          # (C,) bool: last CAS was a write
+
+
+def zero_tele(dram: DramParams) -> TickTele:
+    """A zeroed per-channel `TickTele` accumulator."""
+    C, RB = dram.n_channels, dram.banks_per_channel
+    zc = jnp.zeros((C,), jnp.int32)
+    zh = jnp.zeros((C, N_HIST), jnp.int32)
+    return TickTele(n_act=zc, n_pre=zc, n_cas_rd=zc, n_cas_wr=zc,
+                    n_ref=zc, drain_enter=zc, drain_ticks=zc,
+                    busy_ticks=jnp.zeros((C, RB), jnp.int32),
+                    hist_rd_ticks=zh, hist_if_ps=zh)
+
+
+def init_tele(dram: DramParams) -> TeleState:
+    """Fresh telemetry carry (all banks closed, no drain in progress)."""
+    C, RB = dram.n_channels, dram.banks_per_channel
+    return TeleState(opened_at=jnp.zeros((C, RB), jnp.int32),
+                     last_wr_t=jnp.zeros((C,), jnp.int32),
+                     wr_burst=jnp.zeros((C,), bool))
+
+
+def log2_bucket(v) -> jnp.ndarray:
+    """``floor(log2(max(v, 1)))`` clipped to ``[0, N_HIST - 1]``.
+
+    Integer-exact (count-leading-zeros, no float log), so histogram
+    bucket edges land exactly on powers of two.
+    """
+    v = jnp.maximum(jnp.asarray(v, jnp.int32), 1)
+    return jnp.minimum(31 - jax.lax.clz(v), N_HIST - 1)
+
+
 def init_queue(dram: DramParams, policy: SchedulerPolicy,
                n_sockets: int = 1) -> QueueState:
     """Empty per-channel request queue: (C, queue_depth) int32 slots.
@@ -214,7 +293,8 @@ def _gather(bank_field, fbank):
 def tick(queue: QueueState, banks: BankState, t, *,
          dram: DramParams, policy: SchedulerPolicy,
          tick2cpu_num: int, tick2cpu_den: int, cpu_ps_per_clk: int,
-         active=True, planes: BankPlanes | None = None):
+         active=True, planes: BankPlanes | None = None,
+         telemetry: bool = False, tele: TeleState | None = None):
     """Advance the memory system by one DRAM tick.
 
     Args:
@@ -233,10 +313,18 @@ def tick(queue: QueueState, banks: BankState, t, *,
             scalar or per-channel ``(C,)``, like ``t``.
         planes: the device's precomputed `BankPlanes`; defaults to the
             cached `bank_planes(dram)`.
+        telemetry: **static** flag; when False (default) the traced
+            computation is exactly the historical tick graph.  When
+            True, the tick additionally returns its `TickTele`
+            increments and the threaded `TeleState`.
+        tele: the telemetry carry (`TeleState`); only read with
+            ``telemetry=True``.
 
     Returns:
-        ``(queue', banks', TickStats)``.  Latencies in `TickStats` are
-        DRAM ticks (simulator view) and picoseconds (interface view).
+        ``(queue', banks', TickStats)``, or with ``telemetry=True``
+        ``(queue', banks', TickStats, TickTele, TeleState)``.
+        Latencies in `TickStats` are DRAM ticks (simulator view) and
+        picoseconds (interface view).
     """
     C = dram.n_channels
     nbanks = dram.banks_per_rank
@@ -246,6 +334,7 @@ def tick(queue: QueueState, banks: BankState, t, *,
     t = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (C,))
     active = jnp.broadcast_to(jnp.asarray(active), (C,))
     t_r = t[:, None]                    # against (C, R) / (C, RB) / (C, Q)
+    open_row_pre = banks.open_row       # pre-refresh (telemetry: busy)
 
     # ---- refresh ----------------------------------------------------
     # All-bank (DDR4/HBM2e): close the whole rank, block it for tRFC.
@@ -428,8 +517,9 @@ def tick(queue: QueueState, banks: BankState, t, *,
     # ---- stats --------------------------------------------------------
     done_t = t + dram.tCL + dram.tBL + policy.mc_extra_ticks
     rd_lat = done_t - s_arr                                     # ticks
-    if_lat_ps = (done_t * tick2cpu_num // tick2cpu_den
-                 - s_issue * cpu_ps_per_clk).astype(jnp.float32)
+    if_lat_i = (done_t * tick2cpu_num // tick2cpu_den
+                - s_issue * cpu_ps_per_clk)                     # ps, int32
+    if_lat_ps = if_lat_i.astype(jnp.float32)
     stats = TickStats(
         served_rd=s_rd.astype(jnp.int32),
         served_wr=s_wr.astype(jnp.int32),
@@ -438,7 +528,55 @@ def tick(queue: QueueState, banks: BankState, t, *,
         chase_rd=(s_rd & s_chase).astype(jnp.int32),
         sum_chase_lat_ticks=jnp.where(s_rd & s_chase, rd_lat, 0),
     )
-    return queue, banks, stats
+    if not telemetry:
+        return queue, banks, stats
+
+    # ---- telemetry counter planes (static flag: the path above is the
+    # untouched historical graph when telemetry is off) ----------------
+    # Everything is accounted at *events* (command grants, refresh
+    # deadlines, row closes), never sampled per tick, so
+    # the planes are engine-invariant: the event-horizon scan evaluates
+    # exactly the ticks where these events occur.
+    if tele is None:
+        tele = init_tele(dram)
+    # row-open busy time, accounted when the row closes.  A refresh
+    # close covers every refreshed bank that held an open row; a PRE
+    # close covers the selected bank (ACT and PRE are mutually
+    # exclusive per channel per tick, so `opened_at` ordering is safe).
+    busy = jnp.where(refmask & (open_row_pre >= 0),
+                     t_r - tele.opened_at, 0)
+    opened_at = tele.opened_at.at[bsel].set(
+        jnp.where(s_act, t, tele.opened_at[bsel]))
+    busy = busy.at[bsel].add(jnp.where(s_pre, t - opened_at[bsel], 0))
+    # write-drain planes at CAS resolution: a maximal run of write CAS
+    # grants (uninterrupted by a read CAS) is one drain service burst,
+    # and its dwell — span from first to last write grant, plus one
+    # burst of bus time — accrues incrementally at each write grant.
+    # The controller's drain *flag* can flip at ticks the event engine
+    # provably need not evaluate (when the last drained write retires,
+    # nothing new becomes eligible until the next arrival), so flag
+    # transitions are NOT engine-invariant; CAS grants are, by
+    # bit-identity of the engines.
+    enter = s_wr & ~tele.wr_burst
+    dwell = jnp.where(s_wr, jnp.where(tele.wr_burst,
+                                      t - tele.last_wr_t, dram.tBL), 0)
+    last_wr_t = jnp.where(s_wr, t, tele.last_wr_t)
+    wr_burst = jnp.where(s_cas, s_wr, tele.wr_burst)
+    # log2 latency histograms: simulator view in DRAM ticks, interface
+    # view in CPU-perceived picoseconds (the int behind sum_if_lat_ps)
+    one_rd = s_rd.astype(jnp.int32)
+    hist_rd = jnp.zeros((C, N_HIST), jnp.int32).at[
+        cidx, log2_bucket(rd_lat)].add(one_rd)
+    hist_if = jnp.zeros((C, N_HIST), jnp.int32).at[
+        cidx, log2_bucket(if_lat_i)].add(one_rd)
+    tele_inc = TickTele(
+        n_act=s_act.astype(jnp.int32), n_pre=s_pre.astype(jnp.int32),
+        n_cas_rd=one_rd, n_cas_wr=s_wr.astype(jnp.int32),
+        n_ref=jnp.sum(ref_due.astype(jnp.int32), axis=1),
+        drain_enter=enter.astype(jnp.int32), drain_ticks=dwell,
+        busy_ticks=busy, hist_rd_ticks=hist_rd, hist_if_ps=hist_if)
+    return queue, banks, stats, tele_inc, TeleState(opened_at, last_wr_t,
+                                                    wr_burst)
 
 
 def next_event(queue: QueueState, banks: BankState, t, end, *,

@@ -94,21 +94,101 @@ def _sweep_fn(cfg: StageConfig):
                         donate=True)
 
 
+#: measured events/window calibration, keyed on the *device* (the
+#: hashable `DramParams`) and stage name: ``(per_pace, fixed)`` linear
+#: coefficients from `load_event_calibration`.  Routing only — the
+#: exact ``weave_sat`` backstop means a stale entry costs speed, never
+#: correctness.
+_EVENT_CAL: dict = {}
+
+#: safety margin over the measured fit: refresh beats and drain-phase
+#: wander shift per-window event counts between workloads, so route a
+#: point to the event engine only with measured headroom to spare.
+CAL_MARGIN = 1.35
+
+
+def load_event_calibration(path: str | None = None) -> int:
+    """Load measured events/window fits from a ``BENCH_weave.json``.
+
+    `benchmarks.weave_bench` fits ``events/window ~ per_pace * pace +
+    fixed`` per device preset from the compiled event engine's own
+    ``weave_events`` diagnostics (the ROADMAP "event-engine tuning"
+    item); this registers those fits so `event_covers` routes pace
+    points on *measured* rates instead of the conservative closed-form
+    bound.  Entries key on ``(DramParams, stage_name)``, so a
+    calibration for one device never routes another.
+
+    Args:
+        path: report path; defaults to the repo's checked-in
+            ``reports/benchmarks/BENCH_weave.json``.
+    Returns:
+        The number of calibration entries registered (0 when the
+        report is missing or carries no fits — routing falls back to
+        the closed-form estimate, unchanged behavior).
+    """
+    import json
+    import pathlib
+
+    from repro.core.presets import PRESETS, platform_for
+
+    if path is None:
+        path = (pathlib.Path(__file__).resolve().parents[3]
+                / "reports" / "benchmarks" / "BENCH_weave.json")
+    path = pathlib.Path(path)
+    if not path.exists():
+        return 0
+    report = json.loads(path.read_text())
+    stage = report.get("stage", "")
+    n = 0
+    for preset, row in report.get("presets", {}).items():
+        fit = row.get("event_rate_fit")
+        if not fit or preset not in PRESETS:
+            continue
+        _EVENT_CAL[(platform_for(preset).dram, stage)] = (
+            float(fit["per_pace"]), float(fit["fixed"]))
+        n += 1
+    return n
+
+
+_CAL_LOADED = False
+
+
+def _ensure_calibration():
+    """Lazily register the checked-in calibration once per process (a
+    malformed or missing report must never break a sweep — routing
+    falls back to the closed-form bound)."""
+    global _CAL_LOADED
+    if not _CAL_LOADED:
+        _CAL_LOADED = True
+        try:
+            load_event_calibration()
+        except (OSError, ValueError, KeyError, TypeError):
+            pass
+
+
 def event_covers(cfg: StageConfig, pace: int) -> bool:
     """Static estimate: does the event budget cover this pace's events?
 
     Per window, a pace-``p`` point offers ``p * n_traffic`` requests
     over ``C`` channels; each needs at most ~3 commands (PRE+ACT+CAS
     on a row miss), plus ~``p`` arrival bursts and fixed chase-probe /
-    refresh / drain-settle headroom.  Used by `sweep` to route points
-    between the engines; deliberately conservative (command ticks
-    coalesce across channels in practice), and backstopped at runtime
-    by the exact ``weave_sat`` flag — a mis-routed point is re-run
-    dense, so routing affects speed, never results.
+    refresh / drain-settle headroom.  When a measured calibration is
+    registered for this device and stage (`load_event_calibration`),
+    the fitted events/window rate (x `CAL_MARGIN` safety) replaces the
+    closed-form bound.  Used by `sweep` to route points between the
+    engines; deliberately conservative (command ticks coalesce across
+    channels in practice), and backstopped at runtime by the exact
+    ``weave_sat`` flag — a mis-routed point is re-run dense, so
+    routing affects speed, never results.
     """
     wcfg = cfg.workload_config()
     dram = cfg.platform.dram
-    est = (3 * pace * wcfg.n_traffic) // dram.n_channels + pace + 64
+    cal = _EVENT_CAL.get((dram, cfg.name))
+    if cal is not None:
+        a, b = cal
+        est = int((a * pace + max(b, 0.0)) * CAL_MARGIN) + 1
+    else:
+        est = (3 * pace * wcfg.n_traffic) // dram.n_channels + pace + 64
     return est <= cfg.event_budget()
 
 
@@ -129,6 +209,7 @@ def _run_mix(cfg: StageConfig, paces, wr):
         return jax.device_get(_sweep_fn(cfg)(
             (pace_v, jnp.full_like(pace_v, wr))))
 
+    _ensure_calibration()
     cfg_dense = dataclasses.replace(cfg, weave="dense")
     ev = [i for i, p in enumerate(paces) if event_covers(cfg, p)]
     dn = [i for i in range(n) if i not in ev]

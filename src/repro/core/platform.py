@@ -83,6 +83,14 @@ class StageConfig:
     #: multi-socket channel ownership: "interleaved" (all sockets hit
     #: all channels) or "partitioned" (n_channels/n_sockets per socket).
     socket_channels: str = "interleaved"
+    #: three-perspective telemetry (`repro.obs`): when True, the weave
+    #: loop accumulates per-channel command-mix counter planes and
+    #: log2 latency histograms (`dram.TickTele`) and the window step
+    #: samples interface-view series (queue depth, MSHR budget, PI
+    #: estimate), all emitted as ``tele_*`` keys in the views.  Static
+    #: flag, off by default: the False path traces the exact historical
+    #: graph, so all outputs stay bit-identical and free when off.
+    telemetry: bool = False
     platform: PlatformParams = dataclasses.field(
         default_factory=lambda: DEFAULT_PLATFORM)
 
@@ -127,7 +135,11 @@ class WindowOut(NamedTuple):
 
 def _window_step(cfg: StageConfig, clock: ClockModel, wcfg: WorkloadConfig,
                  frontend, carry, w):
-    queue, banks, fstate, l_ir, lat_est = carry
+    if cfg.telemetry:
+        queue, banks, fstate, l_ir, lat_est, tstate = carry
+    else:
+        queue, banks, fstate, l_ir, lat_est = carry
+        tstate = None
     cpu = cfg.platform.cpu
     l_ir_cycles = jnp.maximum(jnp.round(l_ir).astype(jnp.int32), 1)
     window_ps = cpu.window_cycles * cpu.cpu_ps_per_clk
@@ -139,6 +151,11 @@ def _window_step(cfg: StageConfig, clock: ClockModel, wcfg: WorkloadConfig,
     queue, acc_demand, injected = workload.inject_queue(queue, cand,
                                                         clock, w, wcfg)
     fstate = frontend.update(fstate, aux, acc_demand)
+    if cfg.telemetry:
+        # interface-view series: per-channel queue depth right after
+        # this window's injection (window boundaries are engine-
+        # invariant, so the sample is identical under dense and event)
+        inject_depth = jnp.sum(queue.valid, axis=1)
 
     # weave phase: cycle-accurate DRAM simulation of this window's ticks
     start = clock.window_start_tick(w)
@@ -148,25 +165,40 @@ def _window_step(cfg: StageConfig, clock: ClockModel, wcfg: WorkloadConfig,
         dram.tick, dram=cfg.platform.dram, policy=cfg.policy,
         tick2cpu_num=clock.tick_to_cpu_ps_num,
         tick2cpu_den=clock.tick_to_cpu_ps_den,
-        cpu_ps_per_clk=cpu.cpu_ps_per_clk, planes=planes)
+        cpu_ps_per_clk=cpu.cpu_ps_per_clk, planes=planes,
+        telemetry=cfg.telemetry)
 
     # Stats accumulate (C,)-per-channel in the scan *carry*, in time
     # order per channel — idle ticks add exact zeros (the float32
     # identity), so window totals are bit-identical across engines.
+    # With telemetry on, the integer `TickTele` planes accumulate in
+    # the same carry (ints commute, so the planes are engine-exact).
     acc0 = dram.zero_stats(cfg.platform.dram)
+    tacc0 = dram.zero_tele(cfg.platform.dram) if cfg.telemetry else None
     tree_add = functools.partial(jax.tree_util.tree_map, jnp.add)
 
     if cfg.weave == "dense":
         # reference engine: one scan step per DRAM tick
-        def body(qba, i):
-            q, b, acc = qba
-            t = start + i
-            q, b, s = tick_fn(q, b, t, active=t < end)
-            return (q, b, tree_add(acc, s)), None
+        if cfg.telemetry:
+            def body(qba, i):
+                q, b, acc, tacc, ts = qba
+                t = start + i
+                q, b, s, ti, ts = tick_fn(q, b, t, active=t < end, tele=ts)
+                return (q, b, tree_add(acc, s), tree_add(tacc, ti), ts), None
 
-        (queue, banks, st), _ = jax.lax.scan(
-            body, (queue, banks, acc0),
-            jnp.arange(clock.ticks_per_window_static, dtype=jnp.int32))
+            (queue, banks, st, tacc, tstate), _ = jax.lax.scan(
+                body, (queue, banks, acc0, tacc0, tstate),
+                jnp.arange(clock.ticks_per_window_static, dtype=jnp.int32))
+        else:
+            def body(qba, i):
+                q, b, acc = qba
+                t = start + i
+                q, b, s = tick_fn(q, b, t, active=t < end)
+                return (q, b, tree_add(acc, s)), None
+
+            (queue, banks, st), _ = jax.lax.scan(
+                body, (queue, banks, acc0),
+                jnp.arange(clock.ticks_per_window_static, dtype=jnp.int32))
         weave_events = end - start
         weave_sat = jnp.zeros((), bool)
     else:
@@ -183,17 +215,32 @@ def _window_step(cfg: StageConfig, clock: ClockModel, wcfg: WorkloadConfig,
             planes=planes)
         t0 = jnp.full((cfg.platform.dram.n_channels,), 1, jnp.int32)
 
-        def ebody(qbta, i):
-            q, b, t, acc = qbta
-            tn = nev_fn(q, b, t, horizon)               # (C,)
-            live = tn < horizon
-            tau = jnp.minimum(tn, horizon - 1)
-            q, b, s = tick_fn(q, b, tau, active=live & (tau < end))
-            return (q, b, tau, tree_add(acc, s)), tn < end
+        if cfg.telemetry:
+            def ebody(qbta, i):
+                q, b, t, acc, tacc, ts = qbta
+                tn = nev_fn(q, b, t, horizon)           # (C,)
+                live = tn < horizon
+                tau = jnp.minimum(tn, horizon - 1)
+                q, b, s, ti, ts = tick_fn(q, b, tau,
+                                          active=live & (tau < end), tele=ts)
+                return (q, b, tau, tree_add(acc, s),
+                        tree_add(tacc, ti), ts), tn < end
 
-        (queue, banks, t_last, st), live = jax.lax.scan(
-            ebody, (queue, banks, t0 * (start - 1), acc0),
-            jnp.arange(cfg.event_budget(), dtype=jnp.int32))
+            (queue, banks, t_last, st, tacc, tstate), live = jax.lax.scan(
+                ebody, (queue, banks, t0 * (start - 1), acc0, tacc0, tstate),
+                jnp.arange(cfg.event_budget(), dtype=jnp.int32))
+        else:
+            def ebody(qbta, i):
+                q, b, t, acc = qbta
+                tn = nev_fn(q, b, t, horizon)           # (C,)
+                live = tn < horizon
+                tau = jnp.minimum(tn, horizon - 1)
+                q, b, s = tick_fn(q, b, tau, active=live & (tau < end))
+                return (q, b, tau, tree_add(acc, s)), tn < end
+
+            (queue, banks, t_last, st), live = jax.lax.scan(
+                ebody, (queue, banks, t0 * (start - 1), acc0),
+                jnp.arange(cfg.event_budget(), dtype=jnp.int32))
         # the binding constraint is the busiest channel's event count
         weave_events = jnp.max(jnp.sum(live.astype(jnp.int32), axis=0))
         # budget exhausted with events still pending anywhere before
@@ -241,6 +288,18 @@ def _window_step(cfg: StageConfig, clock: ClockModel, wcfg: WorkloadConfig,
     # the per-window trajectory stays bit-identical across engines):
     # evaluated event ticks this window + the budget-saturation flag.
     diag = dict(weave_events=weave_events, weave_sat=weave_sat)
+    if cfg.telemetry:
+        # the three-perspective telemetry planes (`repro.obs`): the
+        # per-window DRAM counter/histogram planes plus the interface-
+        # view series sampled at window boundaries.  All integer
+        # counters are *event-accounted* (at command grants, refresh
+        # deadlines, drain flips), so both weave engines accumulate
+        # identical window totals.
+        diag.update({f"tele_{k}": v for k, v in tacc._asdict().items()},
+                    tele_queue_depth=inject_depth,
+                    tele_mshr_budget=budget,
+                    tele_lat_est_ps=lat_est)
+        return (queue, banks, fstate, l_ir_next, lat_est, tstate), (out, diag)
     return (queue, banks, fstate, l_ir_next, lat_est), (out, diag)
 
 
@@ -276,9 +335,11 @@ def run_frontend(cfg: StageConfig, frontend):
         * cfg.platform.dram.dram_ps_per_clk, jnp.float32)
 
     step = functools.partial(_window_step, cfg, clock, wcfg, frontend)
+    carry0 = (queue, banks, fstate, l_ir0, lat_est0)
+    if cfg.telemetry:
+        carry0 += (dram.init_tele(cfg.platform.dram),)
     _, (outs, diag) = jax.lax.scan(
-        step, (queue, banks, fstate, l_ir0, lat_est0),
-        jnp.arange(cfg.windows, dtype=jnp.int32))
+        step, carry0, jnp.arange(cfg.windows, dtype=jnp.int32))
     return _aggregate(cfg, outs, diag), outs
 
 
@@ -359,4 +420,7 @@ def _aggregate(cfg: StageConfig, outs: WindowOut, diag=None):
             / jnp.maximum(ksum(outs.chase_rd), 1).astype(jnp.float32),
         injected=ksum(outs.injected),
         weave_events=weave_events, weave_sat=weave_sat,
+        # telemetry planes pass through raw, full (W, ...) per-window
+        # series (consumers slice warmup themselves — `repro.obs`).
+        **{k: v for k, v in (diag or {}).items() if k.startswith("tele_")},
     )

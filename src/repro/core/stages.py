@@ -68,7 +68,9 @@ def get_stage(name: str, preset: str | None = None,
             swaps the platform's `DramParams` while keeping the Skylake
             CPU frontend.  ``None`` / ``"ddr4_2666"`` keep the paper's
             device exactly.
-        **overrides: any `StageConfig` field (``windows=32, warmup=8``).
+        **overrides: any `StageConfig` field (``windows=32, warmup=8``;
+            ``telemetry=True`` turns on the three-perspective
+            telemetry planes of `repro.obs`).
     """
     try:
         cfg = STAGES[name]

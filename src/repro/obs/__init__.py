@@ -1,0 +1,34 @@
+"""Three-perspective observability (`repro.obs`).
+
+The paper's thesis is that the *simulator*, *CPU-memory interface*,
+and *application* perspectives of the same run can diverge — and that
+the correction ladder (stages 01→10) re-couples them.  This package
+turns the platform's in-kernel telemetry planes (enabled with
+``StageConfig(telemetry=True)``) into inspectable artifacts:
+
+* `repro.obs.telemetry` — collect the raw ``tele_*`` view series into
+  a `TelemetryRecord`; reduce to command mixes, row-locality splits,
+  bank utilization, and latency percentiles.
+* `repro.obs.export` — structured JSON reports and a Chrome-trace /
+  Perfetto JSON timeline (per-channel command tracks, write-drain
+  phase slices, per-core progress tracks).
+* `repro.obs.perspectives` — per-window rank correlation between the
+  three views' latency/progress series: the machine-readable
+  "perspectives diverge, corrections re-couple them" report.
+
+Telemetry is a **static** `StageConfig` flag: when off (default) the
+traced computation is exactly the historical graph — bit-identical
+outputs, zero cost.  When on, every counter is *event-accounted*
+inside `repro.core.dram.tick`, so both weave engines (dense and
+event-horizon) produce identical planes.
+"""
+from repro.obs.telemetry import (TELE_KEYS, TelemetryRecord, collect,
+                                 hist_edges, hist_percentiles, summarize)
+from repro.obs.export import to_json, to_perfetto, validate_perfetto
+from repro.obs.perspectives import divergence_report, spearman, window_series
+
+__all__ = [
+    "TELE_KEYS", "TelemetryRecord", "collect", "hist_edges",
+    "hist_percentiles", "summarize", "to_json", "to_perfetto",
+    "validate_perfetto", "divergence_report", "spearman", "window_series",
+]

@@ -51,8 +51,15 @@ def _replay_fn(cfg: StageConfig, donate: bool = False):
     def one(trace):
         views, outs = run_frontend(cfg, TraceFrontend(
             trace, cfg.workload_config()))
-        return dict({k: views[k] for k in VIEW_KEYS},
-                    weave_sat=views["weave_sat"], progress=outs.progress)
+        out = dict({k: views[k] for k in VIEW_KEYS},
+                   weave_sat=views["weave_sat"], progress=outs.progress)
+        if cfg.telemetry:
+            # three-perspective telemetry planes (`repro.obs`): full
+            # (W, ...) per-window series, flat keys so the batch axis
+            # vmaps and the dense fallback's row merge work unchanged
+            out.update({k: v for k, v in views.items()
+                        if k.startswith("tele_")})
+        return out
 
     return sharded_vmap(one, donate=donate)
 

@@ -1,0 +1,281 @@
+"""Three-perspective telemetry: zero-impact when off, exact when on.
+
+The contract of `StageConfig.telemetry`:
+
+* **off (default)** — the traced computation is the exact historical
+  graph: every semantic output is bit-identical with the flag on vs
+  off, on both weave engines;
+* **on** — the ``tele_*`` planes are event-accounted inside
+  `repro.core.dram.tick`, so the dense and event-horizon engines
+  accumulate identical planes, and the histograms are exact: every
+  served read lands in exactly one bucket of each latency histogram.
+
+Plus unit coverage of the reduction / export / divergence layers
+(`repro.obs`).
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dram, get_stage
+from repro.core.platform import run_frontend
+from repro.core.workload import MessFrontend
+from repro.obs import (TELE_KEYS, collect, hist_edges, hist_percentiles,
+                       spearman, summarize, to_json, to_perfetto,
+                       validate_perfetto, window_series)
+from repro.obs.perspectives import divergence, divergence_report
+from repro.traces import assign_traces, split_cores
+from repro.traces.frontend import TraceFrontend
+from repro.traces.kernels import gups, stream
+
+FAST = dict(windows=6, warmup=2)
+
+#: view keys that must not move when telemetry turns on
+SEMANTIC_VIEWS = ("sim_bw_gbs", "sim_lat_ns", "if_bw_gbs", "if_lat_ns",
+                  "app_bw_gbs", "app_lat_ns", "chase_lat_ns",
+                  "n_rd", "n_wr", "l_ir_final", "injected")
+
+
+def mess(pace=8, wr=16):
+    def build(cfg):
+        fe = MessFrontend(jnp.int32(pace), jnp.int32(wr),
+                          cfg.workload_config())
+        return lambda: run_frontend(cfg, fe)
+
+    return build
+
+
+def solo(n=256):
+    trace = stream(n=n)
+
+    def build(cfg):
+        return lambda: run_frontend(
+            cfg, TraceFrontend(trace, cfg.workload_config()))
+
+    build.full_budget = True          # MSHR-hot replay needs full budget
+    return build
+
+
+def mix(n=192):
+    apps = [stream(n=n), gups(n=n)]
+
+    def build(cfg):
+        m = assign_traces(apps,
+                          split_cores(2, cfg.workload_config().n_cores),
+                          phase_offsets=None)
+        return lambda: run_frontend(
+            cfg, TraceFrontend(m, cfg.workload_config()))
+
+    build.full_budget = True
+    return build
+
+
+def run_cell(stage, preset, frontend, weave, telemetry):
+    cfg = get_stage(stage, preset=preset, weave=weave,
+                    telemetry=telemetry, **FAST)
+    if weave == "event" and getattr(frontend, "full_budget", False):
+        cfg = dataclasses.replace(
+            cfg, weave_events=cfg.clock().ticks_per_window_static)
+    views, outs = jax.device_get(jax.jit(frontend(cfg))())
+    return cfg, views, outs
+
+
+# presets x weave engines x frontend kinds — the golden-grid subset
+GRID = [
+    ("10-delay-buffer", "ddr4_2666", mess()),
+    ("04-model-correct", "ddr4_2666", solo()),
+    ("10-delay-buffer", "ddr5_4800", mix()),
+    ("01-baseline", "hbm2e", mix()),
+]
+_IDS = [f"{g[0]}-{g[1]}-{g[2].__qualname__.split('.')[0]}" for g in GRID]
+
+
+@pytest.mark.parametrize("stage,preset,frontend", GRID, ids=_IDS)
+def test_telemetry_off_and_on_agree(stage, preset, frontend):
+    """One grid cell, both engines: (a) turning telemetry on changes no
+    semantic output bit (off == seed graph by construction, so off-vs-on
+    equality pins the on-path too); (b) the planes agree between the
+    dense and event engines; (c) histogram totals equal served reads,
+    per window."""
+    planes = {}
+    for weave in ("dense", "event"):
+        _, v_off, o_off = run_cell(stage, preset, frontend, weave, False)
+        _, v_on, o_on = run_cell(stage, preset, frontend, weave, True)
+        # (a) semantic equality, full per-window trajectory included
+        for name, a, b in zip(o_off._fields, o_off, o_on):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"[{weave}] WindowOut.{name} moved with telemetry")
+        for key in SEMANTIC_VIEWS:
+            np.testing.assert_array_equal(
+                np.asarray(v_off[key]), np.asarray(v_on[key]),
+                err_msg=f"[{weave}] view {key!r} moved with telemetry")
+        assert not any(k.startswith("tele_") for k in v_off)
+        assert all(k in v_on for k in TELE_KEYS)
+        planes[weave] = (v_on, o_on)
+
+    # (b) engine-invariant planes
+    (vd, _), (ve, _) = planes["dense"], planes["event"]
+    for k in TELE_KEYS:
+        np.testing.assert_array_equal(
+            np.asarray(vd[k]), np.asarray(ve[k]),
+            err_msg=f"plane {k!r} differs between weave engines")
+
+    # (c) per-window histogram totals == served reads (both histograms)
+    v, o = planes["dense"]
+    served = np.asarray(o.served_rd)        # (W,) summed over channels
+    for hk in ("tele_hist_rd_ticks", "tele_hist_if_ps"):
+        h = np.asarray(v[hk])
+        tot = h.sum(axis=tuple(range(1, h.ndim)))
+        np.testing.assert_array_equal(tot, served, err_msg=hk)
+    np.testing.assert_array_equal(
+        np.asarray(v["tele_n_cas_rd"]).sum(axis=-1), served)
+    np.testing.assert_array_equal(
+        np.asarray(v["tele_n_cas_wr"]).sum(axis=-1),
+        np.asarray(o.served_wr))
+
+
+def test_log2_bucket_integer_exact():
+    v = jnp.asarray([1, 2, 3, 4, 7, 8, 1023, 1024, 1 << 22, (1 << 24) + 5])
+    b = np.asarray(dram.log2_bucket(v))
+    assert b.tolist() == [0, 1, 1, 2, 2, 3, 9, 10, 22, dram.N_HIST - 1]
+    # exact powers of two land in their own bucket, never the previous
+    p = np.asarray(dram.log2_bucket(jnp.asarray([2 ** k for k in range(23)])))
+    assert p.tolist() == list(range(23))
+
+
+def test_hist_percentiles_and_edges():
+    edges = hist_edges()
+    assert edges[0] == 1 and edges[-1] == 2.0 ** dram.N_HIST
+    # all mass in bucket 4 ([16, 32)): every quantile inside that bucket
+    h = np.zeros(dram.N_HIST, np.int64)
+    h[4] = 100
+    p50, p95, p99 = hist_percentiles(h)
+    assert 16.0 <= p50 <= p95 <= p99 <= 32.0
+    # empty histogram: nan, not a crash
+    assert np.isnan(hist_percentiles(np.zeros(dram.N_HIST))).all()
+    # leading axes reduce by summation
+    hh = np.stack([h, h])
+    np.testing.assert_allclose(hist_percentiles(hh),
+                               hist_percentiles(2 * h))
+
+
+def test_spearman_ties_and_degenerate():
+    assert spearman([1, 2, 3, 4], [10, 20, 30, 40]) == pytest.approx(1.0)
+    assert spearman([1, 2, 3, 4], [40, 30, 20, 10]) == pytest.approx(-1.0)
+    # zero variance (the decoupled app view): 0.0, not nan
+    assert spearman([5, 5, 5, 5], [1, 2, 3, 4]) == 0.0
+    # ties get average ranks (monotone with ties is still rho=1 on the
+    # untied pairs' ordering)
+    r = spearman([1, 1, 2, 3], [10, 10, 20, 30])
+    assert r == pytest.approx(1.0)
+    with pytest.raises(ValueError):
+        spearman([1, 2], [1, 2, 3])
+
+
+@pytest.fixture(scope="module")
+def tele_run():
+    """One telemetry-on mix replay shared by the reduction tests."""
+    cfg, views, outs = run_cell("10-delay-buffer", "ddr4_2666", mix(),
+                                "dense", True)
+    return cfg, views, outs
+
+
+def test_collect_and_summarize(tele_run):
+    cfg, views, outs = tele_run
+    rec = collect(cfg, views, outs)
+    s = summarize(rec)
+    c = s["commands"]            # summarize reduces post-warmup only
+    assert c["cas_rd"] == int(
+        np.asarray(outs.served_rd)[cfg.warmup:].sum())
+    rl = s["row_locality"]
+    assert rl["hits"] >= 0 and rl["misses"] >= 0 and rl["conflicts"] >= 0
+    assert 0.0 <= rl["hit_rate"] <= 1.0
+    assert 0.0 <= s["bank_busy_frac"] <= 1.0
+    for view in ("sim_lat_ns", "if_lat_ns"):
+        p = s[view]
+        assert p["p50"] <= p["p95"] <= p["p99"]
+    # off-config collect must refuse
+    cfg_off = dataclasses.replace(cfg, telemetry=False)
+    with pytest.raises(ValueError):
+        collect(cfg_off, views, outs)
+
+
+def test_json_and_perfetto_export(tele_run, tmp_path):
+    cfg, views, outs = tele_run
+    rec = collect(cfg, views, outs)
+
+    jpath = tmp_path / "tele.json"
+    report = to_json(rec, jpath)
+    loaded = json.loads(jpath.read_text())
+    assert loaded["schema"] == report["schema"] == "repro.obs/telemetry-v1"
+    assert set(loaded["series"]) == set(TELE_KEYS)
+
+    tpath = tmp_path / "trace.json"
+    trace = to_perfetto(rec, tpath)
+    n = validate_perfetto(trace)
+    assert n == len(trace["traceEvents"]) > 0
+    # the file round-trips through plain JSON and stays valid
+    assert validate_perfetto(json.loads(tpath.read_text())) == n
+    # one command counter track per channel per window
+    cmd = [e for e in trace["traceEvents"]
+           if e["ph"] == "C" and "commands" in e["name"]]
+    assert len(cmd) == cfg.windows * cfg.platform.dram.n_channels
+
+    for bad in (
+        {},                                           # no traceEvents
+        dict(traceEvents=[]),                         # empty
+        dict(traceEvents=[dict(ph="Z", pid=1, name="x")]),   # bad phase
+        dict(traceEvents=[dict(ph="C", pid=1, name="x commands",
+                               ts=0.0, args={})]),    # empty counter args
+        dict(traceEvents=[dict(ph="C", pid=1, name="queue",
+                               ts=0.0, args=dict(d=1))]),  # no cmd track
+    ):
+        with pytest.raises(ValueError):
+            validate_perfetto(bad)
+
+
+def test_window_series_and_divergence(tele_run):
+    cfg, views, outs = tele_run
+    rec = collect(cfg, views, outs)
+    ser = window_series(rec)
+    span = cfg.windows - cfg.warmup
+    for k in ("sim_lat_ns", "if_lat_ns", "app_lat_ns", "app_rate"):
+        assert ser[k].shape == (span,), k
+    d = divergence(rec)
+    for k in ("rho_sim_if", "rho_sim_app", "rho_if_app",
+              "rho_sim_app_level", "rho_sim_rate"):
+        assert -1.0 <= d[k] <= 1.0, k
+
+    # the decoupling signature: a broken stage's app view never moves,
+    # so its response correlation is exactly 0
+    cfg0, v0, o0 = run_cell("01-baseline", "ddr4_2666", mix(),
+                            "dense", True)
+    rec0 = collect(cfg0, v0, o0)
+    assert divergence(rec0)["rho_sim_app"] == 0.0
+
+    report = divergence_report({"01-baseline": rec0,
+                                "10-delay-buffer": rec})
+    assert [r["stage"] for r in report["ladder"]] == [
+        "01-baseline", "10-delay-buffer"]
+    assert report["schema"] == "repro.obs/perspectives-v1"
+    assert isinstance(report["monotone_ok"], bool)
+    json.dumps(report)                   # artifact is JSON-serializable
+
+
+def test_row_locality_identity(tele_run):
+    """Each request retires with exactly one CAS, so commands bound the
+    locality split: cas >= hits, act >= pre over any long-enough span
+    (refresh-forced re-ACTs make strict per-window identities clamp —
+    documented in `TickTele`)."""
+    cfg, views, outs = tele_run
+    n_cas = int(np.asarray(views["tele_n_cas_rd"]).sum()
+                + np.asarray(views["tele_n_cas_wr"]).sum())
+    n_act = int(np.asarray(views["tele_n_act"]).sum())
+    n_pre = int(np.asarray(views["tele_n_pre"]).sum())
+    assert n_cas >= n_act - n_pre >= 0 or n_act >= n_pre
+    assert n_act > 0 and n_cas > 0
