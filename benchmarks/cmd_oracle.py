@@ -1,0 +1,206 @@
+"""Command-level differential oracle: both engines, every DRAM rule.
+
+The tentpole fidelity claim is layered: windows agree (golden grid),
+telemetry planes agree (obs), and — this harness — the *per-command
+schedule* agrees and is JEDEC-legal.  For a grid of preset x stage x
+app cells it replays the same workload through the dense and the
+event-horizon weave engines with ``StageConfig(cmd_trace=True)``,
+flattens both recorded streams (`repro.oracle.extract_stream`), and
+asserts:
+
+* **stream equality** — `repro.oracle.diff_streams` finds no
+  divergence between the engines, row for row;
+* **protocol legality** — `repro.oracle.check_stream` replays the
+  stream against the preset's `DramParams` and every timing/state
+  rule in `repro.oracle.RULES` holds, refresh deadlines included;
+* **stats agreement** — per-channel bandwidth and command mixes
+  (`repro.oracle.stream_stats`) match between engines.
+
+The DDR4 cells run enough windows to cross ``tREFI`` so the all-bank
+refresh path is exercised; DDR5 fires per-bank refreshes (REFsb)
+within a handful of windows.
+
+Artifacts (``reports/benchmarks/``):
+
+* ``cmd_oracle.json`` — per-cell legality + agreement report;
+* ``cmd_oracle_ddr4_2666.cmd.trace`` — one exported Ramulator2-style
+  command trace, schema-checked by `repro.obs.export.validate_cmd_trace`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+
+from benchmarks.util import OUT_DIR, emit
+from repro.core import get_stage
+from repro.core.platform import run_frontend
+from repro.core.workload import MessFrontend
+from repro.obs.export import to_cmd_trace, validate_cmd_trace
+from repro.oracle import check_stream, diff_streams, extract_stream, \
+    stream_stats
+from repro.traces import assign_traces, split_cores
+from repro.traces.frontend import TraceFrontend
+from repro.traces.kernels import gups, stream
+
+
+def mess(pace, wr):
+    def build(cfg):
+        fe = MessFrontend(pace, wr, cfg.workload_config())
+        return lambda: run_frontend(cfg, fe)
+
+    build.app = f"mess-p{pace}w{wr}"
+    return build
+
+
+def solo(n):
+    trace = stream(n=n)
+
+    def build(cfg):
+        return lambda: run_frontend(
+            cfg, TraceFrontend(trace, cfg.workload_config()))
+
+    build.app = "solo-stream"
+    build.full_budget = True
+    return build
+
+
+def mix(n):
+    apps = [stream(n=n), gups(n=n)]
+
+    def build(cfg):
+        m = assign_traces(apps,
+                          split_cores(2, cfg.workload_config().n_cores),
+                          phase_offsets=None)
+        return lambda: run_frontend(cfg, TraceFrontend(m, cfg.workload_config()))
+
+    build.app = "mix-stream-gups"
+    build.full_budget = True
+    return build
+
+
+#: (stage, preset, app builder, windows) — windows chosen so every
+#: preset crosses its refresh interval at least once (DDR4's
+#: tREFI=10400 ticks needs ~17 windows of ~635 ticks; HBM2e ~9;
+#: DDR5's per-bank tREFI=292 fires within the first window).
+SMOKE = [
+    ("01-baseline", "ddr4_2666", mess(8, 16), 20),
+    ("10-delay-buffer", "ddr4_2666", mix(192), 20),
+    ("04-model-correct", "ddr5_4800", solo(256), 6),
+    ("09-ramulator2", "ddr5_4800", mess(8, 32), 6),
+    ("04-model-correct", "hbm2e", mix(192), 12),
+    ("10-delay-buffer", "hbm2e", mess(16, 0), 12),
+]
+FULL = SMOKE + [
+    ("02-clock-scale", "ddr4_2666", solo(512), 24),
+    ("05-addrmap", "ddr4_2666", mess(4, 0), 24),
+    ("08-dramsim3", "ddr5_4800", mix(256), 12),
+    ("09-ramulator2", "hbm2e", solo(512), 16),
+]
+
+
+def run_cell(stage, preset, frontend, windows):
+    """One preset x stage x app cell: record on both engines, check."""
+    streams, views = {}, {}
+    for weave in ("dense", "event"):
+        cfg = get_stage(stage, preset=preset, windows=windows,
+                        warmup=max(windows // 5, 1), weave=weave,
+                        cmd_trace=True)
+        if weave == "event" and getattr(frontend, "full_budget", False):
+            cfg = dataclasses.replace(
+                cfg, weave_events=cfg.clock().ticks_per_window_static)
+        v, _ = jax.device_get(jax.jit(frontend(cfg))())
+        views[weave] = v
+        streams[weave] = extract_stream(v, cfg.platform.dram)
+    end_tick = int(cfg.clock().window_end_tick(cfg.windows - 1))
+
+    diff = diff_streams(streams["dense"], streams["event"])
+    rep = check_stream(streams["dense"], end_tick=end_tick)
+    stats = {w: stream_stats(s, span_ticks=end_tick)
+             for w, s in streams.items()}
+    bw_delta = float(np.max(np.abs(stats["dense"]["bw_gbs"]
+                                   - stats["event"]["bw_gbs"])))
+    mix_agree = all(
+        (stats["dense"][k] == stats["event"][k]).all()
+        for k in ("RD", "WR", "ACT", "PRE", "REF"))
+    sat = sum(int(np.sum(v["weave_sat"])) for v in views.values())
+    cell = dict(
+        stage=stage, preset=preset, app=frontend.app, windows=windows,
+        end_tick=end_tick, n_commands=len(streams["dense"]),
+        counts=streams["dense"].counts(), n_checked=rep.n_checked,
+        violation_counts=rep.violation_counts,
+        streams_identical=diff is None, diff=diff,
+        legal_ok=rep.ok, mix_agree=bool(mix_agree),
+        bw_delta_gbs=bw_delta, weave_sat=sat,
+        bw_gbs=[round(float(x), 3)
+                for x in stats["dense"]["bw_gbs"]],
+        ok=bool(diff is None and rep.ok and mix_agree
+                and bw_delta == 0.0 and sat == 0))
+    return cell, streams["dense"]
+
+
+def main(full: bool = False):
+    cells, export_stream = [], None
+    for stage, preset, frontend, windows in (FULL if full else SMOKE):
+        cell, s = run_cell(stage, preset, frontend, windows)
+        cells.append(cell)
+        if preset == "ddr4_2666" and export_stream is None:
+            export_stream = (s, preset)
+        status = "ok" if cell["ok"] else "FAIL"
+        emit(f"cmd_oracle/{preset}/{stage}/{cell['app']}", 0.0,
+             f"{status} cmds={cell['n_commands']} "
+             f"checked={sum(cell['n_checked'].values())} "
+             f"ref={cell['counts']['REF']}")
+
+    report = dict(schema="repro.oracle/cmd-oracle-v1",
+                  mode="full" if full else "smoke",
+                  all_ok=all(c["ok"] for c in cells), cells=cells)
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, "cmd_oracle.json"), "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+
+    # one exported Ramulator2-style trace, schema-gated like the
+    # Perfetto artifact in benchmarks/perspectives.py
+    s, preset = export_stream
+    path = os.path.join(OUT_DIR, f"cmd_oracle_{preset}.cmd.trace")
+    validate_cmd_trace(to_cmd_trace(s, path=path, preset=preset))
+
+    emit("cmd_oracle", 0.0,
+         f"all_ok={report['all_ok']} cells={len(cells)} "
+         f"exported={os.path.basename(path)}")
+    if not report["all_ok"]:
+        raise SystemExit("cmd_oracle: a grid cell failed "
+                         "(see reports/benchmarks/cmd_oracle.json)")
+    return report
+
+
+def oracle_table(report: dict | None = None) -> str:
+    """Render a saved cmd_oracle report as a markdown grid table."""
+    if report is None:
+        with open(os.path.join(OUT_DIR, "cmd_oracle.json")) as f:
+            report = json.load(f)
+    lines = ["| stage | preset | app | cmds | checked | REF | "
+             "identical | legal |",
+             "|-------|--------|-----|------|---------|-----|"
+             "-----------|-------|"]
+    for c in report["cells"]:
+        lines.append(
+            f"| {c['stage']} | {c['preset']} | {c['app']} | "
+            f"{c['n_commands']} | {sum(c['n_checked'].values())} | "
+            f"{c['counts']['REF']} | {c['streams_identical']} | "
+            f"{c['legal_ok']} |")
+    lines.append(f"\nall_ok={report['all_ok']} mode={report['mode']}")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--table" in sys.argv:
+        print(oracle_table())
+    else:
+        main(full="--full" in sys.argv)

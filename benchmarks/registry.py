@@ -39,7 +39,14 @@ class BenchSpec:
                        self.main_attr)
 
 
-BENCHMARKS: dict[str, BenchSpec] = {s.name: s for s in (
+#: sorted by name so `run.py --list` / `reanalyze --list-benchmarks`
+#: print a stable alphabetized listing (tested in tests/test_docs.py)
+BENCHMARKS: dict[str, BenchSpec] = {s.name: s for s in sorted((
+    BenchSpec("cmd_oracle", "benchmarks.cmd_oracle",
+              "command-level differential oracle: dense vs event "
+              "cmd_trace streams identical + JEDEC-legal across the "
+              "preset x stage x app grid",
+              ("cmd_oracle*.json", "cmd_oracle*.cmd.trace")),
     BenchSpec("fig2", "benchmarks.fig2_baseline",
               "baseline three-view characterization (per preset)",
               ("fig2_baseline*.csv",)),
@@ -79,7 +86,7 @@ BENCHMARKS: dict[str, BenchSpec] = {s.name: s for s in (
               "dense vs event-horizon weave engine: compiled sweep "
               "wall-clock, scan steps/window, event-budget headroom",
               ("BENCH_weave.json",)),
-)}
+), key=lambda s: s.name)}
 
 
 def get_benchmark(name: str) -> BenchSpec:

@@ -12,6 +12,8 @@ script and the runner always agree on what exists.
 ``--report perspectives [--preset P]`` re-renders the saved
 three-perspective divergence ladder (``perspectives*.json``) as a
 markdown table — reanalysis of the stored artifact, no simulation.
+``--report cmd_oracle`` does the same for the command-level oracle
+grid (``cmd_oracle.json``).
 """
 import glob
 import json
@@ -77,7 +79,13 @@ def report(name: str):
                        if a.startswith("--preset=")), "ddr4_2666")
         print(ladder_table(preset=preset))
         return
-    raise SystemExit(f"unknown report {name!r}; one of: perspectives")
+    if name == "cmd_oracle":
+        from benchmarks.cmd_oracle import oracle_table
+
+        print(oracle_table())
+        return
+    raise SystemExit(
+        f"unknown report {name!r}; one of: perspectives, cmd_oracle")
 
 
 def main():

@@ -150,6 +150,90 @@ def decode_xor_fold(line, dram: DramParams, xp=jnp) -> DecodedAddr:
     return DecodedAddr(ch, rank, bank, row, col)
 
 
+def encode_simple(dec: DecodedAddr, dram: DramParams | None = None,
+                  xp=np):
+    """Inverse of `decode_simple`: pack fields back into a line index.
+
+    Exact for **any** geometry, within the device's capacity:
+    ``encode_simple(decode_simple(line)) == line`` for every line
+    index below ``channels * lines_per_row * ranks * banks * rows``
+    (beyond that `decode_simple` truncates the row field and the line
+    is not representable), and ``decode_simple(encode_simple(fields))``
+    recovers any in-range fields.  Host-side numpy by default — this
+    is the property-test / fuzzer utility, not a simulation path.
+    """
+    C = dram.n_channels if dram else N_CHANNELS
+    R = dram.ranks_per_channel if dram else N_RANKS
+    B = dram.banks_per_rank if dram else N_BANKS
+    lpr = dram.lines_per_row if dram else LINES_PER_ROW
+    row = xp.asarray(dec.row).astype(xp.int64)
+    line = ((((row * B + xp.asarray(dec.bank)) * R + xp.asarray(dec.rank))
+             * lpr + xp.asarray(dec.col)) * C + xp.asarray(dec.channel))
+    return line.astype(xp.uint32)
+
+
+def xor_fold_encodable(dram: DramParams) -> str | None:
+    """Why `encode_xor_fold` cannot invert this geometry (None = it can).
+
+    `decode_xor_fold` is a lossy hash in general; a constructive
+    inverse exists only where every decoded field occupies its own bit
+    range of the line and each XOR tap lands on already-solved bits:
+    power-of-two channel/column/bank/row extents, at most 2 ranks, a
+    channel select of <= 6 bits (below the first XOR tap at bit 6),
+    and channel+column+bank packed under the rank bit at 8.  No real
+    preset qualifies (DDR4/DDR5 have non-power-of-two channel counts;
+    HBM2e packs 9 channel+column+bank bits) — the encoder exists for
+    the synthetic geometries of the property tests and the fuzzer.
+    """
+    bits = {}
+    for name, n in (("channels", dram.n_channels),
+                    ("ranks", dram.ranks_per_channel),
+                    ("banks", dram.banks_per_rank),
+                    ("lines_per_row", dram.lines_per_row),
+                    ("rows_per_bank", dram.rows_per_bank)):
+        b = int(n).bit_length() - 1
+        if n <= 0 or (1 << b) != n:
+            return f"{name}={n} is not a power of two"
+        bits[name] = b
+    if dram.ranks_per_channel > 2:
+        return f"ranks={dram.ranks_per_channel} > 2 (one rank XOR bit)"
+    if bits["channels"] > 6:
+        return (f"channels={dram.n_channels} needs "
+                f"{bits['channels']} > 6 bits (first XOR tap)")
+    low = bits["channels"] + bits["lines_per_row"] + bits["banks"]
+    if low > 8:
+        return (f"channel+column+bank need {low} > 8 bits "
+                "(collides with the rank bit)")
+    return None
+
+
+def encode_xor_fold(dec: DecodedAddr, dram: DramParams, xp=np):
+    """Inverse of `decode_xor_fold` on encodable geometries.
+
+    Solves the XOR folds field-by-field in dependency order — row bits
+    first (they feed every hash), then the rank bit, bank and column
+    fields, and the channel fold last — so
+    ``decode_xor_fold(encode_xor_fold(fields)) == fields`` whenever
+    `xor_fold_encodable` returns ``None`` and the fields are in range.
+    Raises `ValueError` (with the reason) on any other geometry.
+    """
+    reason = xor_fold_encodable(dram)
+    if reason is not None:
+        raise ValueError(f"geometry not xor_fold-encodable: {reason}")
+    C, R = dram.n_channels, dram.ranks_per_channel
+    B, lpr = dram.banks_per_rank, dram.lines_per_row
+    cb = C.bit_length() - 1
+    lb = lpr.bit_length() - 1
+    line = xp.asarray(dec.row).astype(xp.int64) << 9
+    if R == 2:
+        line = line | ((xp.asarray(dec.rank) ^ ((line >> 17) & 1)) << 8)
+    line = line | ((xp.asarray(dec.bank) ^ ((line >> 13) % B)) << (cb + lb))
+    line = line | ((xp.asarray(dec.col) ^ ((line >> (cb + 9)) % lpr)) << cb)
+    line = line | ((xp.asarray(dec.channel)
+                    ^ ((line >> 6) ^ (line >> 12) ^ (line >> 18))) % C)
+    return line.astype(xp.uint32)
+
+
 MAPPINGS = {
     "simple": decode_simple,
     "skylake_xor": decode_skylake_xor,

@@ -37,8 +37,10 @@ import numpy as np
 
 from repro.core.timing import DramParams
 
-# command codes
-NONE, RD, WR, ACT, PRE = 0, 1, 2, 3, 4
+# command codes (REF never competes in the FR-FCFS select — refresh is
+# deadline-driven inside `tick` — but the command-stream recorder and
+# the `repro.oracle` legality checker use it as a first-class code)
+NONE, RD, WR, ACT, PRE, REF = 0, 1, 2, 3, 4, 5
 
 _BIG = jnp.int32(1 << 28)
 
@@ -229,6 +231,40 @@ def init_tele(dram: DramParams) -> TeleState:
                      wr_burst=jnp.zeros((C,), bool))
 
 
+class TickCmd(NamedTuple):
+    """One tick's granted-command record (`StageConfig.cmd_trace`).
+
+    The raw material of the `repro.oracle` command stream: what each
+    channel's controller *did* at the evaluated tick.  Everything is
+    derived from the tick's own command-select intermediates, so with
+    the flag off the traced graph is untouched — and because command
+    grants and refresh firings happen at identical ticks under both
+    weave engines (the bit-identity the golden grid proves), filtering
+    the records down to ``cmd != NONE`` / ``ref`` rows yields the
+    **same per-channel stream** from either engine.
+
+    Fields (``C`` channels, ``R`` ranks/channel):
+
+    * ``cmd`` ``(C,)`` — `NONE`/`RD`/`WR`/`ACT`/`PRE` granted this tick
+      (refresh is recorded separately; it can coincide with a grant).
+    * ``t`` ``(C,)`` — the evaluated DRAM tick (absolute).
+    * ``fbank`` ``(C,)`` — flat bank (``rank * banks_per_rank + bank``)
+      of the granted command; meaningful only when ``cmd != NONE``.
+    * ``row`` ``(C,)`` — target row for ACT/RD/WR; ``-1`` for PRE
+      (the open row is being closed) and idle ticks.
+    * ``ref`` ``(C, R)`` bool — rank ``r`` hit its refresh deadline.
+    * ``ref_bank`` ``(C, R)`` — the REFsb bank-in-rank refreshed
+      (pre-rotation `BankState.ref_slot`); ``-1`` for all-bank refresh.
+    """
+
+    cmd: jnp.ndarray
+    t: jnp.ndarray
+    fbank: jnp.ndarray
+    row: jnp.ndarray
+    ref: jnp.ndarray
+    ref_bank: jnp.ndarray
+
+
 def log2_bucket(v) -> jnp.ndarray:
     """``floor(log2(max(v, 1)))`` clipped to ``[0, N_HIST - 1]``.
 
@@ -294,7 +330,8 @@ def tick(queue: QueueState, banks: BankState, t, *,
          dram: DramParams, policy: SchedulerPolicy,
          tick2cpu_num: int, tick2cpu_den: int, cpu_ps_per_clk: int,
          active=True, planes: BankPlanes | None = None,
-         telemetry: bool = False, tele: TeleState | None = None):
+         telemetry: bool = False, tele: TeleState | None = None,
+         cmd_trace: bool = False):
     """Advance the memory system by one DRAM tick.
 
     Args:
@@ -319,10 +356,15 @@ def tick(queue: QueueState, banks: BankState, t, *,
             increments and the threaded `TeleState`.
         tele: the telemetry carry (`TeleState`); only read with
             ``telemetry=True``.
+        cmd_trace: **static** flag; when True the tick additionally
+            returns its `TickCmd` command record (the `repro.oracle`
+            recorder).  Like ``telemetry``, the False path traces
+            exactly the historical graph.
 
     Returns:
-        ``(queue', banks', TickStats)``, or with ``telemetry=True``
-        ``(queue', banks', TickStats, TickTele, TeleState)``.
+        ``(queue', banks', TickStats)``; ``telemetry=True`` appends
+        ``(TickTele, TeleState)`` and ``cmd_trace=True`` appends a
+        trailing `TickCmd` (the flags compose, in that order).
         Latencies in `TickStats` are DRAM ticks (simulator view) and
         picoseconds (interface view).
     """
@@ -335,6 +377,7 @@ def tick(queue: QueueState, banks: BankState, t, *,
     active = jnp.broadcast_to(jnp.asarray(active), (C,))
     t_r = t[:, None]                    # against (C, R) / (C, RB) / (C, Q)
     open_row_pre = banks.open_row       # pre-refresh (telemetry: busy)
+    ref_slot_pre = banks.ref_slot       # pre-rotation (cmd_trace: REFsb)
 
     # ---- refresh ----------------------------------------------------
     # All-bank (DDR4/HBM2e): close the whole rank, block it for tRFC.
@@ -528,55 +571,75 @@ def tick(queue: QueueState, banks: BankState, t, *,
         chase_rd=(s_rd & s_chase).astype(jnp.int32),
         sum_chase_lat_ticks=jnp.where(s_rd & s_chase, rd_lat, 0),
     )
-    if not telemetry:
+    if not telemetry and not cmd_trace:
         return queue, banks, stats
 
-    # ---- telemetry counter planes (static flag: the path above is the
-    # untouched historical graph when telemetry is off) ----------------
-    # Everything is accounted at *events* (command grants, refresh
-    # deadlines, row closes), never sampled per tick, so
-    # the planes are engine-invariant: the event-horizon scan evaluates
-    # exactly the ticks where these events occur.
-    if tele is None:
-        tele = init_tele(dram)
-    # row-open busy time, accounted when the row closes.  A refresh
-    # close covers every refreshed bank that held an open row; a PRE
-    # close covers the selected bank (ACT and PRE are mutually
-    # exclusive per channel per tick, so `opened_at` ordering is safe).
-    busy = jnp.where(refmask & (open_row_pre >= 0),
-                     t_r - tele.opened_at, 0)
-    opened_at = tele.opened_at.at[bsel].set(
-        jnp.where(s_act, t, tele.opened_at[bsel]))
-    busy = busy.at[bsel].add(jnp.where(s_pre, t - opened_at[bsel], 0))
-    # write-drain planes at CAS resolution: a maximal run of write CAS
-    # grants (uninterrupted by a read CAS) is one drain service burst,
-    # and its dwell — span from first to last write grant, plus one
-    # burst of bus time — accrues incrementally at each write grant.
-    # The controller's drain *flag* can flip at ticks the event engine
-    # provably need not evaluate (when the last drained write retires,
-    # nothing new becomes eligible until the next arrival), so flag
-    # transitions are NOT engine-invariant; CAS grants are, by
-    # bit-identity of the engines.
-    enter = s_wr & ~tele.wr_burst
-    dwell = jnp.where(s_wr, jnp.where(tele.wr_burst,
-                                      t - tele.last_wr_t, dram.tBL), 0)
-    last_wr_t = jnp.where(s_wr, t, tele.last_wr_t)
-    wr_burst = jnp.where(s_cas, s_wr, tele.wr_burst)
-    # log2 latency histograms: simulator view in DRAM ticks, interface
-    # view in CPU-perceived picoseconds (the int behind sum_if_lat_ps)
-    one_rd = s_rd.astype(jnp.int32)
-    hist_rd = jnp.zeros((C, N_HIST), jnp.int32).at[
-        cidx, log2_bucket(rd_lat)].add(one_rd)
-    hist_if = jnp.zeros((C, N_HIST), jnp.int32).at[
-        cidx, log2_bucket(if_lat_i)].add(one_rd)
-    tele_inc = TickTele(
-        n_act=s_act.astype(jnp.int32), n_pre=s_pre.astype(jnp.int32),
-        n_cas_rd=one_rd, n_cas_wr=s_wr.astype(jnp.int32),
-        n_ref=jnp.sum(ref_due.astype(jnp.int32), axis=1),
-        drain_enter=enter.astype(jnp.int32), drain_ticks=dwell,
-        busy_ticks=busy, hist_rd_ticks=hist_rd, hist_if_ps=hist_if)
-    return queue, banks, stats, tele_inc, TeleState(opened_at, last_wr_t,
-                                                    wr_burst)
+    extras = ()
+    if telemetry:
+        # ---- telemetry counter planes (static flag: the path above is
+        # the untouched historical graph when telemetry is off) --------
+        # Everything is accounted at *events* (command grants, refresh
+        # deadlines, row closes), never sampled per tick, so the planes
+        # are engine-invariant: the event-horizon scan evaluates
+        # exactly the ticks where these events occur.
+        if tele is None:
+            tele = init_tele(dram)
+        # row-open busy time, accounted when the row closes.  A refresh
+        # close covers every refreshed bank that held an open row; a
+        # PRE close covers the selected bank (ACT and PRE are mutually
+        # exclusive per channel per tick, so `opened_at` ordering is
+        # safe).
+        busy = jnp.where(refmask & (open_row_pre >= 0),
+                         t_r - tele.opened_at, 0)
+        opened_at = tele.opened_at.at[bsel].set(
+            jnp.where(s_act, t, tele.opened_at[bsel]))
+        busy = busy.at[bsel].add(jnp.where(s_pre, t - opened_at[bsel], 0))
+        # write-drain planes at CAS resolution: a maximal run of write
+        # CAS grants (uninterrupted by a read CAS) is one drain service
+        # burst, and its dwell — span from first to last write grant,
+        # plus one burst of bus time — accrues incrementally at each
+        # write grant.  The controller's drain *flag* can flip at ticks
+        # the event engine provably need not evaluate (when the last
+        # drained write retires, nothing new becomes eligible until the
+        # next arrival), so flag transitions are NOT engine-invariant;
+        # CAS grants are, by bit-identity of the engines.
+        enter = s_wr & ~tele.wr_burst
+        dwell = jnp.where(s_wr, jnp.where(tele.wr_burst,
+                                          t - tele.last_wr_t, dram.tBL), 0)
+        last_wr_t = jnp.where(s_wr, t, tele.last_wr_t)
+        wr_burst = jnp.where(s_cas, s_wr, tele.wr_burst)
+        # log2 latency histograms: simulator view in DRAM ticks,
+        # interface view in CPU-perceived picoseconds (the int behind
+        # sum_if_lat_ps)
+        one_rd = s_rd.astype(jnp.int32)
+        hist_rd = jnp.zeros((C, N_HIST), jnp.int32).at[
+            cidx, log2_bucket(rd_lat)].add(one_rd)
+        hist_if = jnp.zeros((C, N_HIST), jnp.int32).at[
+            cidx, log2_bucket(if_lat_i)].add(one_rd)
+        tele_inc = TickTele(
+            n_act=s_act.astype(jnp.int32), n_pre=s_pre.astype(jnp.int32),
+            n_cas_rd=one_rd, n_cas_wr=s_wr.astype(jnp.int32),
+            n_ref=jnp.sum(ref_due.astype(jnp.int32), axis=1),
+            drain_enter=enter.astype(jnp.int32), drain_ticks=dwell,
+            busy_ticks=busy, hist_rd_ticks=hist_rd, hist_if_ps=hist_if)
+        extras = (tele_inc, TeleState(opened_at, last_wr_t, wr_burst))
+    if cmd_trace:
+        # ---- command-stream record (the `repro.oracle` recorder) -----
+        # Pure functions of the command-select intermediates above: the
+        # grant code, its bank/row target, and the refresh firings —
+        # everything the protocol-legality checker replays.
+        cmd = jnp.where(s_rd, RD, jnp.where(s_wr, WR,
+                        jnp.where(s_act, ACT,
+                                  jnp.where(s_pre, PRE, NONE))))
+        cmdrec = TickCmd(
+            cmd=cmd.astype(jnp.int32), t=t, fbank=s_fb,
+            row=jnp.where(s_act | s_cas, s_row, -1),
+            ref=ref_due,
+            ref_bank=(jnp.where(ref_due, ref_slot_pre, -1)
+                      if dram.same_bank_refresh
+                      else jnp.full_like(ref_slot_pre, -1)))
+        extras += (cmdrec,)
+    return (queue, banks, stats) + extras
 
 
 def next_event(queue: QueueState, banks: BankState, t, end, *,

@@ -204,6 +204,15 @@ def _run_mix(cfg: StageConfig, paces, wr):
     semantics are exact.
     """
     n = len(paces)
+    if cfg.cmd_trace:
+        # the per-step `cmd_*` records have engine-dependent step-axis
+        # shapes (dense: ticks/window, event: budget), so the knee-
+        # routed engine merge below cannot column-stack them; record
+        # command streams through `platform.run_frontend` +
+        # `repro.oracle.extract_stream` on a single engine instead
+        raise ValueError("cmd_trace is unsupported in mess.sweep's "
+                         "knee-routed engine mix; run run_frontend "
+                         "with an explicit weave engine instead")
     if cfg.weave != "event":
         pace_v = jnp.asarray(paces, jnp.int32)
         return jax.device_get(_sweep_fn(cfg)(

@@ -91,6 +91,15 @@ class StageConfig:
     #: flag, off by default: the False path traces the exact historical
     #: graph, so all outputs stay bit-identical and free when off.
     telemetry: bool = False
+    #: command-stream recorder (`repro.oracle`): when True, every weave
+    #: step also emits the granted DRAM command (`dram.TickCmd` — code,
+    #: grant tick, bank, row, refresh firings) as ``cmd_*`` keys in the
+    #: views, ready for `repro.oracle.extract_stream` and the protocol-
+    #: legality checker.  Static flag like ``telemetry``: the False
+    #: path traces the exact historical graph, and because both weave
+    #: engines evaluate exactly the grant ticks, the recorded streams
+    #: are engine-invariant.
+    cmd_trace: bool = False
     platform: PlatformParams = dataclasses.field(
         default_factory=lambda: DEFAULT_PLATFORM)
 
@@ -135,11 +144,7 @@ class WindowOut(NamedTuple):
 
 def _window_step(cfg: StageConfig, clock: ClockModel, wcfg: WorkloadConfig,
                  frontend, carry, w):
-    if cfg.telemetry:
-        queue, banks, fstate, l_ir, lat_est, tstate = carry
-    else:
-        queue, banks, fstate, l_ir, lat_est = carry
-        tstate = None
+    queue, banks, fstate, l_ir, lat_est, tstate = carry
     cpu = cfg.platform.cpu
     l_ir_cycles = jnp.maximum(jnp.round(l_ir).astype(jnp.int32), 1)
     window_ps = cpu.window_cycles * cpu.cpu_ps_per_clk
@@ -166,7 +171,7 @@ def _window_step(cfg: StageConfig, clock: ClockModel, wcfg: WorkloadConfig,
         tick2cpu_num=clock.tick_to_cpu_ps_num,
         tick2cpu_den=clock.tick_to_cpu_ps_den,
         cpu_ps_per_clk=cpu.cpu_ps_per_clk, planes=planes,
-        telemetry=cfg.telemetry)
+        telemetry=cfg.telemetry, cmd_trace=cfg.cmd_trace)
 
     # Stats accumulate (C,)-per-channel in the scan *carry*, in time
     # order per channel — idle ticks add exact zeros (the float32
@@ -177,28 +182,31 @@ def _window_step(cfg: StageConfig, clock: ClockModel, wcfg: WorkloadConfig,
     tacc0 = dram.zero_tele(cfg.platform.dram) if cfg.telemetry else None
     tree_add = functools.partial(jax.tree_util.tree_map, jnp.add)
 
+    # Both scan bodies below are written once for all four flag
+    # combinations: `None` is an *empty* pytree node, so a disabled
+    # flag's carry slot / ys slot contributes no leaves and the traced
+    # graph is exactly the historical flags-off one.
+    def split_extras(rest):
+        """Unpack `dram.tick`'s flag-dependent return tail."""
+        ti = ts = cmd = None
+        if cfg.telemetry:
+            ti, ts, rest = rest[0], rest[1], rest[2:]
+        if cfg.cmd_trace:
+            cmd = rest[0]
+        return ti, ts, cmd
+
     if cfg.weave == "dense":
         # reference engine: one scan step per DRAM tick
-        if cfg.telemetry:
-            def body(qba, i):
-                q, b, acc, tacc, ts = qba
-                t = start + i
-                q, b, s, ti, ts = tick_fn(q, b, t, active=t < end, tele=ts)
-                return (q, b, tree_add(acc, s), tree_add(tacc, ti), ts), None
+        def body(qba, i):
+            q, b, acc, tacc, ts = qba
+            t = start + i
+            q, b, s, *rest = tick_fn(q, b, t, active=t < end, tele=ts)
+            ti, ts, cmd = split_extras(rest)
+            return (q, b, tree_add(acc, s), tree_add(tacc, ti), ts), cmd
 
-            (queue, banks, st, tacc, tstate), _ = jax.lax.scan(
-                body, (queue, banks, acc0, tacc0, tstate),
-                jnp.arange(clock.ticks_per_window_static, dtype=jnp.int32))
-        else:
-            def body(qba, i):
-                q, b, acc = qba
-                t = start + i
-                q, b, s = tick_fn(q, b, t, active=t < end)
-                return (q, b, tree_add(acc, s)), None
-
-            (queue, banks, st), _ = jax.lax.scan(
-                body, (queue, banks, acc0),
-                jnp.arange(clock.ticks_per_window_static, dtype=jnp.int32))
+        (queue, banks, st, tacc, tstate), cmds = jax.lax.scan(
+            body, (queue, banks, acc0, tacc0, tstate),
+            jnp.arange(clock.ticks_per_window_static, dtype=jnp.int32))
         weave_events = end - start
         weave_sat = jnp.zeros((), bool)
     else:
@@ -215,32 +223,20 @@ def _window_step(cfg: StageConfig, clock: ClockModel, wcfg: WorkloadConfig,
             planes=planes)
         t0 = jnp.full((cfg.platform.dram.n_channels,), 1, jnp.int32)
 
-        if cfg.telemetry:
-            def ebody(qbta, i):
-                q, b, t, acc, tacc, ts = qbta
-                tn = nev_fn(q, b, t, horizon)           # (C,)
-                live = tn < horizon
-                tau = jnp.minimum(tn, horizon - 1)
-                q, b, s, ti, ts = tick_fn(q, b, tau,
-                                          active=live & (tau < end), tele=ts)
-                return (q, b, tau, tree_add(acc, s),
-                        tree_add(tacc, ti), ts), tn < end
+        def ebody(qbta, i):
+            q, b, t, acc, tacc, ts = qbta
+            tn = nev_fn(q, b, t, horizon)           # (C,)
+            live = tn < horizon
+            tau = jnp.minimum(tn, horizon - 1)
+            q, b, s, *rest = tick_fn(q, b, tau,
+                                     active=live & (tau < end), tele=ts)
+            ti, ts, cmd = split_extras(rest)
+            return (q, b, tau, tree_add(acc, s),
+                    tree_add(tacc, ti), ts), (tn < end, cmd)
 
-            (queue, banks, t_last, st, tacc, tstate), live = jax.lax.scan(
-                ebody, (queue, banks, t0 * (start - 1), acc0, tacc0, tstate),
-                jnp.arange(cfg.event_budget(), dtype=jnp.int32))
-        else:
-            def ebody(qbta, i):
-                q, b, t, acc = qbta
-                tn = nev_fn(q, b, t, horizon)           # (C,)
-                live = tn < horizon
-                tau = jnp.minimum(tn, horizon - 1)
-                q, b, s = tick_fn(q, b, tau, active=live & (tau < end))
-                return (q, b, tau, tree_add(acc, s)), tn < end
-
-            (queue, banks, t_last, st), live = jax.lax.scan(
-                ebody, (queue, banks, t0 * (start - 1), acc0),
-                jnp.arange(cfg.event_budget(), dtype=jnp.int32))
+        (queue, banks, t_last, st, tacc, tstate), (live, cmds) = jax.lax.scan(
+            ebody, (queue, banks, t0 * (start - 1), acc0, tacc0, tstate),
+            jnp.arange(cfg.event_budget(), dtype=jnp.int32))
         # the binding constraint is the busiest channel's event count
         weave_events = jnp.max(jnp.sum(live.astype(jnp.int32), axis=0))
         # budget exhausted with events still pending anywhere before
@@ -299,8 +295,14 @@ def _window_step(cfg: StageConfig, clock: ClockModel, wcfg: WorkloadConfig,
                     tele_queue_depth=inject_depth,
                     tele_mshr_budget=budget,
                     tele_lat_est_ps=lat_est)
-        return (queue, banks, fstate, l_ir_next, lat_est, tstate), (out, diag)
-    return (queue, banks, fstate, l_ir_next, lat_est), (out, diag)
+    if cfg.cmd_trace:
+        # the per-step command record (`repro.oracle`): the ys axis is
+        # the weave scan's step axis (dense: one slot per tick; event:
+        # one per budget step), so a window's record is dense in steps
+        # but sparse in commands — `repro.oracle.extract_stream`
+        # filters the NONE slots and flattens to a time-ordered stream.
+        diag.update({f"cmd_{k}": v for k, v in cmds._asdict().items()})
+    return (queue, banks, fstate, l_ir_next, lat_est, tstate), (out, diag)
 
 
 def run_frontend(cfg: StageConfig, frontend):
@@ -335,9 +337,10 @@ def run_frontend(cfg: StageConfig, frontend):
         * cfg.platform.dram.dram_ps_per_clk, jnp.float32)
 
     step = functools.partial(_window_step, cfg, clock, wcfg, frontend)
-    carry0 = (queue, banks, fstate, l_ir0, lat_est0)
-    if cfg.telemetry:
-        carry0 += (dram.init_tele(cfg.platform.dram),)
+    # the trailing telemetry-state slot is None (an empty pytree node)
+    # when telemetry is off, keeping the flags-off graph historical
+    carry0 = (queue, banks, fstate, l_ir0, lat_est0,
+              dram.init_tele(cfg.platform.dram) if cfg.telemetry else None)
     _, (outs, diag) = jax.lax.scan(
         step, carry0, jnp.arange(cfg.windows, dtype=jnp.int32))
     return _aggregate(cfg, outs, diag), outs
@@ -420,7 +423,9 @@ def _aggregate(cfg: StageConfig, outs: WindowOut, diag=None):
             / jnp.maximum(ksum(outs.chase_rd), 1).astype(jnp.float32),
         injected=ksum(outs.injected),
         weave_events=weave_events, weave_sat=weave_sat,
-        # telemetry planes pass through raw, full (W, ...) per-window
-        # series (consumers slice warmup themselves — `repro.obs`).
-        **{k: v for k, v in (diag or {}).items() if k.startswith("tele_")},
+        # telemetry planes and command records pass through raw, full
+        # (W, ...) per-window series (consumers slice warmup / filter
+        # NONE slots themselves — `repro.obs`, `repro.oracle`).
+        **{k: v for k, v in (diag or {}).items()
+           if k.startswith(("tele_", "cmd_"))},
     )

@@ -70,7 +70,8 @@ def get_stage(name: str, preset: str | None = None,
             device exactly.
         **overrides: any `StageConfig` field (``windows=32, warmup=8``;
             ``telemetry=True`` turns on the three-perspective
-            telemetry planes of `repro.obs`).
+            telemetry planes of `repro.obs`; ``cmd_trace=True`` turns
+            on the DRAM command-stream recorder of `repro.oracle`).
     """
     try:
         cfg = STAGES[name]

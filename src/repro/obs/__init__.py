@@ -11,7 +11,9 @@ turns the platform's in-kernel telemetry planes (enabled with
   bank utilization, and latency percentiles.
 * `repro.obs.export` — structured JSON reports and a Chrome-trace /
   Perfetto JSON timeline (per-channel command tracks, write-drain
-  phase slices, per-core progress tracks).
+  phase slices, per-core progress tracks), plus the Ramulator2-
+  compatible ``.cmd.trace`` exporter for recorded `repro.oracle`
+  command streams.
 * `repro.obs.perspectives` — per-window rank correlation between the
   three views' latency/progress series: the machine-readable
   "perspectives diverge, corrections re-couple them" report.
@@ -24,11 +26,13 @@ event-horizon) produce identical planes.
 """
 from repro.obs.telemetry import (TELE_KEYS, TelemetryRecord, collect,
                                  hist_edges, hist_percentiles, summarize)
-from repro.obs.export import to_json, to_perfetto, validate_perfetto
+from repro.obs.export import (to_cmd_trace, to_json, to_perfetto,
+                              validate_cmd_trace, validate_perfetto)
 from repro.obs.perspectives import divergence_report, spearman, window_series
 
 __all__ = [
     "TELE_KEYS", "TelemetryRecord", "collect", "hist_edges",
     "hist_percentiles", "summarize", "to_json", "to_perfetto",
-    "validate_perfetto", "divergence_report", "spearman", "window_series",
+    "validate_perfetto", "to_cmd_trace", "validate_cmd_trace",
+    "divergence_report", "spearman", "window_series",
 ]

@@ -19,6 +19,12 @@ Timestamps are window starts on the CPU clock
 cpu_ps_per_clk``), converted to the format's microseconds.
 
 `validate_perfetto` is the schema check CI runs on exported traces.
+
+`to_cmd_trace` / `validate_cmd_trace` export and schema-check the
+command-level view: a recorded `repro.oracle.CommandStream` rendered
+as the Ramulator2-compatible ``.cmd.trace`` text format (one granted
+DRAM command or refresh per line), for differential replay against an
+external simulator.
 """
 from __future__ import annotations
 
@@ -177,3 +183,145 @@ def validate_perfetto(obj) -> int:
     if n_cmd_tracks == 0:
         raise ValueError("no per-channel command counter tracks found")
     return len(events)
+
+
+#: the ``.cmd.trace`` format marker (line 1) and row header (line 3)
+CMD_TRACE_HEADER = "# repro.oracle cmd-trace-v1"
+CMD_TRACE_COLUMNS = "# tick,channel,cmd,rank,bank_group,bank,row"
+#: command vocabulary: refresh splits by coverage (all-bank / same-bank)
+CMD_TRACE_CMDS = ("ACT", "PRE", "RD", "WR", "REFab", "REFsb")
+
+
+def to_cmd_trace(stream, path=None, preset: str = "") -> str:
+    """Render a `repro.oracle.CommandStream` as ``.cmd.trace`` text.
+
+    The format (documented in docs/VALIDATION.md, checked by
+    `validate_cmd_trace`): a version marker, a geometry metadata
+    comment, a column header, then one CSV row per granted command or
+    refresh — the Ramulator2 command vocabulary (``ACT``/``PRE``/
+    ``RD``/``WR``/``REFab``/``REFsb``) with absolute DRAM-tick
+    timestamps, ready for replay against an external simulator.  Rows
+    are channel-major and time-ordered per channel (a refresh precedes
+    a same-tick grant); ``-1`` marks fields a command does not carry
+    (``row`` for PRE/REF, ``bank_group``/``bank`` for REFab).
+
+    Args:
+        stream: the recorded `repro.oracle.CommandStream`.
+        path: optional file to write the text to.
+        preset: device-preset name for the metadata line.
+    Returns:
+        The full trace text (newline-terminated).
+    """
+    from repro.core.dram import ACT, PRE, RD, REF, WR
+    d = stream.dram
+    bpg = d.banks_per_group
+    lines = [
+        CMD_TRACE_HEADER,
+        (f"# preset={preset or 'custom'} channels={d.n_channels}"
+         f" ranks={d.ranks_per_channel} banks={d.banks_per_rank}"
+         f" bank_groups={d.bank_groups} tck_ps={d.dram_ps_per_clk}"),
+        CMD_TRACE_COLUMNS,
+    ]
+    names = {ACT: "ACT", PRE: "PRE", RD: "RD", WR: "WR"}
+    for i in range(len(stream)):
+        cmd, bank = int(stream.cmd[i]), int(stream.bank[i])
+        if cmd == REF:
+            name = "REFsb" if bank >= 0 else "REFab"
+        else:
+            name = names[cmd]
+        grp = bank // bpg if bank >= 0 else -1
+        lines.append(f"{int(stream.t[i])},{int(stream.channel[i])},"
+                     f"{name},{int(stream.rank[i])},{grp},{bank},"
+                     f"{int(stream.row[i])}")
+    text = "\n".join(lines) + "\n"
+    if path is not None:
+        with open(path, "w") as f:
+            f.write(text)
+    return text
+
+
+def validate_cmd_trace(text: str) -> int:
+    """Schema-check ``.cmd.trace`` text; the CI gate for exports.
+
+    Verifies the version marker, the geometry metadata, the column
+    header, and every row: known command mnemonic, fields in range for
+    the declared geometry, ``-1`` conventions respected (REFab carries
+    no group/bank/row, PRE no row, ACT/RD/WR a real row), and grant
+    times strictly increasing per channel (refreshes may share the
+    tick of a grant, never regress).
+
+    Returns the number of command rows; raises `ValueError` on any
+    violation.
+    """
+    lines = text.splitlines()
+    if len(lines) < 4:
+        raise ValueError("truncated trace: header + at least one row "
+                         "required")
+    if lines[0] != CMD_TRACE_HEADER:
+        raise ValueError(f"line 1: expected {CMD_TRACE_HEADER!r}")
+    if not lines[1].startswith("# "):
+        raise ValueError("line 2: missing metadata comment")
+    meta = {}
+    for tok in lines[1][2:].split():
+        if "=" not in tok:
+            raise ValueError(f"line 2: malformed metadata token {tok!r}")
+        key, _, val = tok.partition("=")
+        meta[key] = val
+    geom = {}
+    for key in ("channels", "ranks", "banks", "bank_groups", "tck_ps"):
+        if key not in meta:
+            raise ValueError(f"line 2: metadata lacks {key!r}")
+        try:
+            geom[key] = int(meta[key])
+        except ValueError:
+            raise ValueError(f"line 2: {key} must be an int, "
+                             f"got {meta[key]!r}") from None
+    if lines[2] != CMD_TRACE_COLUMNS:
+        raise ValueError(f"line 3: expected {CMD_TRACE_COLUMNS!r}")
+    bpg = geom["banks"] // geom["bank_groups"]
+    last_t = {}
+    n = 0
+    for ln, line in enumerate(lines[3:], start=4):
+        fields = line.split(",")
+        if len(fields) != 7:
+            raise ValueError(f"line {ln}: expected 7 fields, "
+                             f"got {len(fields)}")
+        cmd = fields[2]
+        if cmd not in CMD_TRACE_CMDS:
+            raise ValueError(f"line {ln}: unknown command {cmd!r}")
+        try:
+            t, ch, rank, grp, bank, row = (
+                int(fields[i]) for i in (0, 1, 3, 4, 5, 6))
+        except ValueError:
+            raise ValueError(
+                f"line {ln}: non-integer field in {line!r}") from None
+        if not 0 <= ch < geom["channels"]:
+            raise ValueError(f"line {ln}: channel {ch} out of range")
+        if not 0 <= rank < geom["ranks"]:
+            raise ValueError(f"line {ln}: rank {rank} out of range")
+        if cmd == "REFab":
+            if (grp, bank, row) != (-1, -1, -1):
+                raise ValueError(f"line {ln}: REFab must carry "
+                                 "group/bank/row = -1")
+        else:
+            if not 0 <= bank < geom["banks"]:
+                raise ValueError(f"line {ln}: bank {bank} out of range")
+            if grp != bank // bpg:
+                raise ValueError(f"line {ln}: bank_group {grp} "
+                                 f"inconsistent with bank {bank}")
+            if cmd in ("ACT", "RD", "WR") and row < 0:
+                raise ValueError(f"line {ln}: {cmd} needs a row >= 0")
+            if cmd in ("PRE", "REFsb") and row != -1:
+                raise ValueError(f"line {ln}: {cmd} must carry row -1")
+        # per-channel ordering: grants strictly increase; a refresh may
+        # share a grant's tick but then must precede it (refresh
+        # applies first inside a tick), and refresh ticks never regress
+        lc, lr = last_t.get(ch, (-1, -1))
+        if t <= lc or t < lr:
+            raise ValueError(f"line {ln}: channel {ch} tick {t} not "
+                             f"after previous grant {lc} / refresh {lr}")
+        last_t[ch] = (lc, t) if cmd.startswith("REF") else (t, lr)
+        n += 1
+    if n == 0:
+        raise ValueError("trace carries no command rows")
+    return n

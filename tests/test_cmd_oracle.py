@@ -1,0 +1,321 @@
+"""The command-stream recorder + protocol oracle (`repro.oracle`).
+
+The contract of `StageConfig.cmd_trace` mirrors `telemetry`:
+
+* **off (default)** — the traced computation is the exact historical
+  graph: every semantic output is bit-identical with the flag on vs
+  off, on both weave engines, and no ``cmd_*`` view exists;
+* **on** — both engines record the *same* per-channel command stream
+  (grant-for-grant, refresh-for-refresh), and that stream passes the
+  full `repro.oracle.RULES` legality check.
+
+Plus unit coverage of the extraction layer, one synthetic-violation
+case per checker rule (the checker must *fire*, not just pass on
+legal streams), and the ``.cmd.trace`` export/validate round trip.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import get_stage
+from repro.core.dram import ACT, PRE, RD, REF, WR
+from repro.core.platform import run_frontend
+from repro.core.presets import platform_for
+from repro.core.workload import MessFrontend
+from repro.obs.export import to_cmd_trace, validate_cmd_trace
+from repro.oracle import (RULES, CommandStream, check_stream, diff_streams,
+                          extract_stream, stream_stats)
+from repro.oracle.stream import CMD_KEYS
+from repro.traces import assign_traces, split_cores
+from repro.traces.frontend import TraceFrontend
+from repro.traces.kernels import gups, stream
+
+FAST = dict(windows=6, warmup=2)
+
+SEMANTIC_VIEWS = ("sim_bw_gbs", "sim_lat_ns", "if_bw_gbs", "if_lat_ns",
+                  "app_bw_gbs", "app_lat_ns", "chase_lat_ns",
+                  "n_rd", "n_wr", "l_ir_final", "injected")
+
+D4 = platform_for("ddr4_2666").dram
+D5 = platform_for("ddr5_4800").dram
+
+
+def mess(pace=8, wr=16):
+    def build(cfg):
+        fe = MessFrontend(jnp.int32(pace), jnp.int32(wr),
+                          cfg.workload_config())
+        return lambda: run_frontend(cfg, fe)
+
+    return build
+
+
+def mix(n=192):
+    apps = [stream(n=n), gups(n=n)]
+
+    def build(cfg):
+        m = assign_traces(apps,
+                          split_cores(2, cfg.workload_config().n_cores),
+                          phase_offsets=None)
+        return lambda: run_frontend(
+            cfg, TraceFrontend(m, cfg.workload_config()))
+
+    build.full_budget = True
+    return build
+
+
+def run_cell(stage, preset, frontend, weave, cmd_trace):
+    cfg = get_stage(stage, preset=preset, weave=weave,
+                    cmd_trace=cmd_trace, **FAST)
+    if weave == "event" and getattr(frontend, "full_budget", False):
+        cfg = dataclasses.replace(
+            cfg, weave_events=cfg.clock().ticks_per_window_static)
+    views, outs = jax.device_get(jax.jit(frontend(cfg))())
+    return cfg, views, outs
+
+
+# the DDR5 cell fires hundreds of per-bank refreshes inside FAST
+# windows (tREFI=292 ticks); DDR4's all-bank path is covered by the
+# fuzzer and benchmarks/cmd_oracle.py at longer horizons
+GRID = [
+    ("10-delay-buffer", "ddr4_2666", mess()),
+    ("04-model-correct", "ddr5_4800", mix()),
+]
+_IDS = [f"{g[0]}-{g[1]}-{g[2].__qualname__.split('.')[0]}" for g in GRID]
+
+
+@pytest.mark.parametrize("stage,preset,frontend", GRID, ids=_IDS)
+def test_cmd_trace_off_and_on_agree(stage, preset, frontend):
+    """One grid cell, both engines: (a) the flag changes no semantic
+    output bit; (b) dense and event record the identical stream; (c)
+    the stream is protocol-legal, refresh deadlines included."""
+    streams = {}
+    for weave in ("dense", "event"):
+        cfg, v_off, o_off = run_cell(stage, preset, frontend, weave, False)
+        _, v_on, o_on = run_cell(stage, preset, frontend, weave, True)
+        for name, a, b in zip(o_off._fields, o_off, o_on):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"[{weave}] WindowOut.{name} moved with cmd_trace")
+        for key in SEMANTIC_VIEWS:
+            np.testing.assert_array_equal(
+                np.asarray(v_off[key]), np.asarray(v_on[key]),
+                err_msg=f"[{weave}] view {key!r} moved with cmd_trace")
+        assert not any(k.startswith("cmd_") for k in v_off)
+        assert all(k in v_on for k in CMD_KEYS)
+        streams[weave] = extract_stream(v_on, cfg.platform.dram)
+
+    # (b) grant-for-grant engine agreement
+    assert diff_streams(streams["dense"], streams["event"]) is None
+    s = streams["dense"]
+    assert len(s) > 0
+    if preset == "ddr5_4800":
+        assert s.counts()["REF"] > 0          # REFsb path exercised
+
+    # (c) full legality, exact refresh deadlines
+    end_tick = int(cfg.clock().window_end_tick(cfg.windows - 1))
+    rep = check_stream(s, end_tick=end_tick)
+    assert rep.ok, rep.summary()
+    assert all(rep.n_checked[r] > 0 for r in
+               ("state-cas-open", "trcd", "tccd-s", "trrd-s"))
+
+    # stats reduce consistently: per-channel mixes sum to the totals
+    st = stream_stats(s, span_ticks=end_tick)
+    for name, tot in s.counts().items():
+        assert int(st[name].sum()) == tot
+    assert (st["bw_gbs"] >= 0).all()
+
+
+# ---------------------------------------------------------------- unit layer
+
+
+def mk(d, rows):
+    """Hand-built single-channel stream: rows (t, cmd, rank, bank, row)."""
+    a = np.asarray(rows, np.int64).reshape(-1, 5)
+    return CommandStream(
+        dram=d, t=a[:, 0], cmd=a[:, 1].astype(np.int32),
+        channel=np.zeros(len(a), np.int32),
+        rank=a[:, 2].astype(np.int32), bank=a[:, 3].astype(np.int32),
+        row=a[:, 4].astype(np.int32))
+
+
+def test_checker_accepts_legal_sequence():
+    s = mk(D4, [
+        (100, ACT, 0, 0, 5),
+        (119, RD, 0, 0, 5),                      # +tRCD
+        (143, PRE, 0, 0, -1),                    # +tRAS
+        (162, ACT, 0, 0, 7),                     # +tRP (and tRC exactly)
+        (181, WR, 0, 0, 7),
+        (219, PRE, 0, 0, -1),                    # +tCWL+tBL+tWR
+    ])
+    rep = check_stream(s)
+    assert rep.ok, rep.summary()
+    assert rep.n_commands == 6 and rep.counts["ACT"] == 2
+
+
+#: rule -> (device, rows) where the checker must fire exactly that rule
+#: (a few cases unavoidably co-fire a coupled rule; asserted per-rule)
+VIOLATIONS = {
+    "state-act-closed": (D4, [(100, ACT, 0, 0, 5), (110, ACT, 0, 0, 6)]),
+    "state-cas-open": (D4, [(100, RD, 0, 0, 5)]),
+    "state-pre-open": (D4, [(100, PRE, 0, 0, -1)]),
+    "trcd": (D4, [(100, ACT, 0, 0, 5), (110, RD, 0, 0, 5)]),
+    "tras": (D4, [(100, ACT, 0, 0, 5), (130, PRE, 0, 0, -1)]),
+    "trp": (D4, [(100, ACT, 0, 0, 5), (119, RD, 0, 0, 5),
+                 (143, PRE, 0, 0, -1), (155, ACT, 0, 0, 6)]),
+    "trc": (D4, [(100, ACT, 0, 0, 5), (119, RD, 0, 0, 5),
+                 (143, PRE, 0, 0, -1), (161, ACT, 0, 0, 6)]),
+    "trtp": (D4, [(100, ACT, 0, 0, 5), (119, RD, 0, 0, 5),
+                  (128, PRE, 0, 0, -1)]),
+    "twr": (D4, [(100, ACT, 0, 0, 5), (119, WR, 0, 0, 5),
+                 (150, PRE, 0, 0, -1)]),
+    "tccd-s": (D4, [(100, ACT, 0, 0, 5), (101, ACT, 1, 0, 5),
+                    (120, RD, 0, 0, 5), (122, RD, 1, 0, 5)]),
+    "tccd-l": (D4, [(100, ACT, 0, 0, 5), (107, ACT, 0, 1, 5),
+                    (126, RD, 0, 0, 5), (131, RD, 0, 1, 5)]),
+    # the rank-switching burst at 125 occupies the bus for
+    # tBL + tRTRS = 6; the follow-up at gap 5 passes tCCD_S but not bus
+    "bus": (D4, [(100, ACT, 0, 0, 5), (102, ACT, 1, 0, 5),
+                 (119, RD, 0, 0, 5), (125, RD, 1, 0, 5),
+                 (130, RD, 0, 0, 5)]),
+    "twtr": (D4, [(100, ACT, 0, 0, 5), (105, ACT, 0, 4, 5),
+                  (119, WR, 0, 0, 5), (130, RD, 0, 4, 5)]),
+    "trtw": (D4, [(100, ACT, 0, 0, 5), (105, ACT, 0, 4, 5),
+                  (124, RD, 0, 0, 5), (130, WR, 0, 4, 5)]),
+    "trrd-s": (D4, [(100, ACT, 0, 0, 5), (102, ACT, 0, 8, 5)]),
+    "trrd-l": (D4, [(100, ACT, 0, 0, 5), (105, ACT, 0, 1, 5)]),
+    "tfaw": (D4, [(100, ACT, 0, 0, 5), (107, ACT, 0, 4, 5),
+                  (114, ACT, 0, 8, 5), (121, ACT, 0, 12, 5),
+                  (126, ACT, 0, 2, 5)]),
+    "trfc": (D4, [(10400, REF, 0, -1, -1), (10500, ACT, 0, 0, 5)]),
+    "trefi": (D4, [(10401, REF, 0, -1, -1)]),
+    "ref-rotation": (D5, [(292, REF, 0, 1, -1)]),
+}
+
+
+@pytest.mark.parametrize("rule", sorted(VIOLATIONS))
+def test_checker_fires_rule(rule):
+    d, rows = VIOLATIONS[rule]
+    rep = check_stream(mk(d, rows))
+    assert rep.violation_counts[rule] > 0, rep.summary()
+    assert not rep.ok
+    ex = [v for v in rep.violations if v["rule"] == rule]
+    assert ex and isinstance(ex[0]["detail"], str)
+
+
+def test_checker_ref_missed_and_exact_deadlines():
+    # an empty stream misses every due refresh on every channel
+    rep = check_stream(mk(D4, np.zeros((0, 5), np.int64)),
+                       end_tick=int(D4.tREFI) + 100)
+    assert rep.violation_counts["ref-missed"] == D4.n_channels
+    # exact-deadline firing (staggered rank 1) is legal; the other,
+    # empty channels of the synthetic stream still read as missed
+    dl0, dl1 = D4.tREFI, D4.tREFI + D4.tREFI // 2
+    s = mk(D4, [(dl0, REF, 0, -1, -1), (dl1, REF, 1, -1, -1)])
+    rep = check_stream(s, end_tick=dl1 + 1)
+    assert rep.violation_counts["trefi"] == 0
+    assert not any(v["channel"] == 0 for v in rep.violations)
+    # ref_slack loosens the deadline rule (experiments knob)
+    late = mk(D4, [(dl0 + 3, REF, 0, -1, -1)])
+    assert check_stream(late).violation_counts["trefi"] == 1
+    assert check_stream(late, ref_slack=3).violation_counts["trefi"] == 0
+
+
+def test_checker_refsb_rotation_legal():
+    dl0, dl1 = D5.tREFI, D5.tREFI + D5.tREFI // 2
+    s = mk(D5, [(dl0, REF, 0, 0, -1), (dl1, REF, 1, 0, -1),
+                (dl0 + D5.tREFI, REF, 0, 1, -1)])
+    rep = check_stream(s)
+    assert rep.ok, rep.summary()
+    assert rep.n_checked["ref-rotation"] == 3
+
+
+def test_rules_table_is_complete():
+    rep = check_stream(mk(D4, [(100, ACT, 0, 0, 5)]))
+    assert set(rep.n_checked) == set(RULES)
+    assert set(rep.violation_counts) == set(RULES)
+    assert all(isinstance(v, str) and v for v in RULES.values())
+
+
+def test_extract_stream_refuses_bad_views():
+    with pytest.raises(ValueError, match="cmd_trace=True"):
+        extract_stream({}, D4)
+    _, views, _ = run_cell("01-baseline", "ddr4_2666", mess(),
+                           "dense", True)
+    s = extract_stream(views, D4)
+    assert len(s) > 0
+    # a vmapped/duplicated batch repeats grant times: refused
+    doubled = {k: np.concatenate([np.asarray(views[k])] * 2)
+               for k in CMD_KEYS}
+    with pytest.raises(ValueError, match="strictly increasing"):
+        extract_stream(doubled, D4)
+
+
+def test_diff_streams_localizes_divergence():
+    rows = [(100, ACT, 0, 0, 5), (119, RD, 0, 0, 5)]
+    a, b = mk(D4, rows), mk(D4, rows)
+    assert diff_streams(a, b) is None
+    b.row[1] = 6
+    d = diff_streams(a, b)
+    assert d["index"] == 1 and d["a"]["row"] == 5 and d["b"]["row"] == 6
+    c = mk(D4, rows + [(143, PRE, 0, 0, -1)])
+    d = diff_streams(a, c)
+    assert d["n_a"] == 2 and d["n_b"] == 3 and d["index"] == 2
+
+
+# ------------------------------------------------------------- export layer
+
+
+def test_cmd_trace_export_round_trip(tmp_path):
+    s = mk(D4, [
+        (100, ACT, 0, 0, 5), (119, RD, 0, 0, 5), (143, PRE, 0, 0, -1),
+        (10400, REF, 0, -1, -1),
+    ])
+    path = tmp_path / "t.cmd.trace"
+    text = to_cmd_trace(s, path=path, preset="ddr4_2666")
+    assert validate_cmd_trace(text) == len(s)
+    assert validate_cmd_trace(path.read_text()) == len(s)
+    rows = text.strip().splitlines()[3:]
+    assert rows[0] == "100,0,ACT,0,0,0,5"
+    assert rows[-1] == "10400,0,REFab,0,-1,-1,-1"
+
+    # DDR5 REFsb carries its bank (and group), row -1
+    s5 = mk(D5, [(292, REF, 0, 3, -1)])
+    t5 = to_cmd_trace(s5, preset="ddr5_4800")
+    assert validate_cmd_trace(t5) == 1
+    assert t5.strip().splitlines()[-1] == (
+        f"292,0,REFsb,0,{3 // D5.banks_per_group},3,-1")
+
+
+def test_validate_cmd_trace_rejects_corruption():
+    s = mk(D4, [(100, ACT, 0, 0, 5), (119, RD, 0, 0, 5),
+                (10400, REF, 0, -1, -1)])
+    text = to_cmd_trace(s, preset="ddr4_2666")
+    lines = text.strip().splitlines()
+    bad = [
+        "\n".join(lines[1:]) + "\n",                      # no marker
+        "\n".join(lines[:3]) + "\n",                      # no rows
+        text.replace("ACT", "XYZ"),                       # bad mnemonic
+        text.replace("100,0,ACT,0,0,0,5",
+                     "100,0,ACT,0,0,0,-1"),               # ACT without row
+        text.replace("10400,0,REFab,0,-1,-1,-1",
+                     "10400,0,REFab,0,0,0,-1"),           # REFab with bank
+        text.replace("119,0,RD,0,0,0,5",
+                     "119,0,RD,0,1,0,5"),                 # group mismatch
+        text.replace("119,0,RD", "99,0,RD"),              # time regression
+        text.replace("119,0,RD,0,0,0,5", "119,0,RD,0,0,0"),   # field count
+    ]
+    for i, b in enumerate(bad):
+        with pytest.raises(ValueError):
+            validate_cmd_trace(b)
+            pytest.fail(f"corruption variant {i} accepted")
+
+
+def test_mess_sweep_refuses_cmd_trace():
+    from repro.core import sweep
+
+    cfg = get_stage("01-baseline", cmd_trace=True, **FAST)
+    with pytest.raises(ValueError, match="cmd_trace"):
+        sweep(cfg, paces=(4,), write_mixes=(0,))

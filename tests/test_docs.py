@@ -42,3 +42,19 @@ def test_readme_links_docs():
         readme = f.read()
     assert "docs/ARCHITECTURE.md" in readme
     assert "docs/VALIDATION.md" in readme
+
+
+def test_benchmark_registry_is_alphabetized():
+    """`run.py --list` / `reanalyze --list-benchmarks` print the
+    registry in iteration order — keep it alphabetized and complete."""
+    sys.path.insert(0, ROOT)
+    try:
+        from benchmarks.registry import BENCHMARKS
+    finally:
+        sys.path.remove(ROOT)
+    names = list(BENCHMARKS)
+    assert names == sorted(names), names
+    assert "cmd_oracle" in names
+    for spec in BENCHMARKS.values():
+        assert spec.name and spec.description
+        assert spec.module.startswith("benchmarks.")

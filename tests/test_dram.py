@@ -133,3 +133,54 @@ def test_write_drain_hysteresis():
     q, b, served = run_ticks(q, b, 400)
     wr_total = sum(w for _, r, w in served)
     assert wr_total >= POL.drain_hi - POL.drain_lo  # drained a batch
+
+
+def test_next_event_is_a_lower_bound():
+    """Property: `dram.next_event` never reports a horizon past real
+    work — for every channel, ticking the frozen state at any time
+    strictly before the reported event grants nothing and moves no
+    state (the event-horizon weave engine's correctness premise)."""
+    from _proptest import forall
+
+    tick_kw = dict(dram=D, policy=POL, tick2cpu_num=750, tick2cpu_den=1,
+                   cpu_ps_per_clk=476)
+
+    @forall(n_cases=12,
+            case_seed=lambda rng: int(rng.integers(0, 1 << 30)))
+    def prop(case_seed):
+        rng = np.random.default_rng(case_seed)
+        entries = [dict(channel=int(rng.integers(0, D.n_channels)),
+                        fbank=int(rng.integers(0, D.banks_per_channel)),
+                        row=int(rng.integers(0, 64)),
+                        is_write=int(rng.integers(0, 2)),
+                        arrival=int(rng.integers(0, 48)))
+                   for _ in range(int(rng.integers(1, 9)))]
+        q = mk_queue(entries)
+        b = dram.init_banks(D)
+        t0 = int(rng.integers(0, 40))
+        q, b, _ = run_ticks(q, b, t0)          # a reachable mid-flight state
+        end = t0 + 1 + int(rng.integers(1, 20000))
+        ev = np.asarray(dram.next_event(q, b, jnp.int32(t0),
+                                        jnp.int32(end), dram=D, policy=POL))
+        assert ((ev > t0) & (ev <= end)).all()
+        for c in range(D.n_channels):
+            span = int(ev[c]) - t0
+            probes = {int(ev[c]) - 1, t0 + 1 + int(rng.integers(0, span))}
+            for tau in probes:
+                if not t0 < tau < int(ev[c]):
+                    continue
+                q2, b2, st = dram.tick(q, b, jnp.int32(tau), **tick_kw)
+                assert int(st.served_rd[c]) == int(st.served_wr[c]) == 0, \
+                    (case_seed, c, tau, int(ev[c]))
+                for name, x, y in zip(b._fields, b, b2):
+                    np.testing.assert_array_equal(
+                        np.asarray(x)[c], np.asarray(y)[c],
+                        err_msg=f"banks.{name} moved before the horizon "
+                                f"(ch {c}, t {tau} < ev {int(ev[c])})")
+                for name, x, y in zip(q._fields, q, q2):
+                    np.testing.assert_array_equal(
+                        np.asarray(x)[c], np.asarray(y)[c],
+                        err_msg=f"queue.{name} moved before the horizon "
+                                f"(ch {c}, t {tau} < ev {int(ev[c])})")
+
+    prop()

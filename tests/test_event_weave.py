@@ -149,6 +149,67 @@ def test_event_engine_bit_identical(stage, preset, frontend, n_sockets):
     assert_bit_identical(dense, event)
 
 
+#: joint static-flag cells: telemetry x cmd_trace x 2 sockets — the
+#: three flags must compose without perturbing the historical graph
+JOINT_GRID = [
+    ("04-model-correct", "ddr5_4800", mix(), 2),
+    ("10-delay-buffer", "ddr4_2666", mix(), 2),
+]
+_JIDS = [f"{g[0]}-{g[1]}-{g[3]}s" for g in JOINT_GRID]
+
+
+@pytest.mark.parametrize("stage,preset,frontend,n_sockets", JOINT_GRID,
+                         ids=_JIDS)
+def test_joint_static_flags_bit_identical(stage, preset, frontend,
+                                          n_sockets):
+    """All three static flags on at once (telemetry + cmd_trace, two
+    sockets), both engines: (a) no semantic output moves vs the
+    flags-off graph; (b) telemetry planes and the recorded command
+    stream are engine-invariant; (c) the stream is protocol-legal."""
+    from repro.obs import TELE_KEYS
+    from repro.oracle import check_stream, diff_streams, extract_stream
+    from repro.oracle.stream import CMD_KEYS
+
+    on = {}
+    for weave in ("dense", "event"):
+        runs = {}
+        for flags in (False, True):
+            cfg = get_stage(stage, preset=preset, n_sockets=n_sockets,
+                            weave=weave, telemetry=flags,
+                            cmd_trace=flags, **FAST)
+            if weave == "event" and getattr(frontend, "full_budget",
+                                            False):
+                cfg = dataclasses.replace(
+                    cfg, weave_events=cfg.clock().ticks_per_window_static)
+            runs[flags] = (cfg, *jax.device_get(jax.jit(frontend(cfg))()))
+        (_, v_off, o_off), (cfg, v_on, o_on) = runs[False], runs[True]
+        for name, a, b in zip(o_off._fields, o_off, o_on):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"[{weave}] WindowOut.{name} moved with "
+                        "telemetry+cmd_trace")
+        for key in SEMANTIC_VIEWS:
+            np.testing.assert_array_equal(
+                np.asarray(v_off[key]), np.asarray(v_on[key]),
+                err_msg=f"[{weave}] view {key!r} moved with "
+                        "telemetry+cmd_trace")
+        assert all(k in v_on for k in TELE_KEYS + tuple(CMD_KEYS))
+        on[weave] = (cfg, v_on)
+
+    (cfg, vd), (_, ve) = on["dense"], on["event"]
+    for k in TELE_KEYS:
+        np.testing.assert_array_equal(
+            np.asarray(vd[k]), np.asarray(ve[k]),
+            err_msg=f"plane {k!r} differs between weave engines")
+    sd = extract_stream(vd, cfg.platform.dram)
+    se = extract_stream(ve, cfg.platform.dram)
+    assert diff_streams(sd, se) is None
+    assert len(sd) > 0
+    rep = check_stream(
+        sd, end_tick=int(cfg.clock().window_end_tick(cfg.windows - 1)))
+    assert rep.ok, rep.summary()
+
+
 def test_replay_fallback_makes_saturated_replay_exact():
     """The user-facing replay path: solo replay is MSHR-hot and
     exhausts the default event budget, so `_replay_exact` re-runs the

@@ -1,0 +1,110 @@
+"""Scenario fuzzer: every random run's command stream is legal.
+
+Each seed draws a random scenario — preset, ladder stage, workload
+(Mess operating point or a 1–3 app trace mix with random kernels,
+lengths, and per-core phase offsets), socket count, weave engine, and
+occasionally a synthetic device geometry — replays it with
+``StageConfig(cmd_trace=True)``, and pushes the recorded stream
+through the full `repro.oracle.check_stream` rule set.  Any violation
+is a controller-model bug (fix `repro.core.dram`, never the checker).
+
+Tier-1 runs a fast 8-seed smoke; nightly CI scales it with
+``REPRO_FUZZ_N`` (e.g. 200).  Seeds are deterministic: a failing seed
+reproduces with ``REPRO_FUZZ_N=<seed+1> pytest -k <seed>``.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import get_stage
+from repro.core.platform import run_frontend
+from repro.core.presets import PRESETS
+from repro.core.workload import MessFrontend
+from repro.oracle import check_stream, extract_stream
+from repro.traces import assign_traces, split_cores
+from repro.traces.frontend import TraceFrontend
+from repro.traces.kernels import (bfs_frontier, gups, pointer_chase,
+                                  spmv, stencil3d, stream)
+
+N_SEEDS = int(os.environ.get("REPRO_FUZZ_N", "8"))
+
+KERNELS = (stream, gups, stencil3d, spmv, pointer_chase, bfs_frontier)
+
+#: stages drawn for standard presets; geometry-variant draws stick to
+#: pre-addrmap stages (the synthetic channel counts are not what the
+#: stage-05+ decoders were pinned against)
+STAGES = ("01-baseline", "02-clock-scale", "03-ps-clock",
+          "04-model-correct", "05-addrmap", "07-prefetch",
+          "08-dramsim3", "09-ramulator2", "10-delay-buffer")
+GEO_STAGES = ("01-baseline", "02-clock-scale", "04-model-correct")
+
+
+def draw_scenario(rng):
+    """One random scenario; returns (description, cfg, frontend_fn)."""
+    preset = str(rng.choice(list(PRESETS)))
+    geo = rng.random() < 0.25
+    stage = str(rng.choice(GEO_STAGES if geo else STAGES))
+    n_sockets = 2 if (not geo and rng.random() < 0.2) else 1
+    windows, warmup = 4, 1
+    weave = str(rng.choice(["dense", "event"]))
+    cfg = get_stage(stage, preset=preset, n_sockets=n_sockets,
+                    windows=windows, warmup=warmup, weave=weave,
+                    cmd_trace=True)
+    if geo:
+        # a synthetic device: the checker must hold off-preset too
+        d = dataclasses.replace(
+            cfg.platform.dram,
+            n_channels=int(rng.choice([2, 3, 4, 6])),
+            ranks_per_channel=int(rng.choice([1, 2])),
+            banks_per_rank=int(rng.choice([8, 16])))
+        cfg = dataclasses.replace(
+            cfg, platform=dataclasses.replace(cfg.platform, dram=d))
+
+    if rng.random() < 0.4:
+        pace = int(rng.integers(1, 49))
+        wr = int(rng.integers(0, 65))
+        desc = f"mess p={pace} wr={wr}"
+
+        def frontend(cfg):
+            fe = MessFrontend(jnp.int32(pace), jnp.int32(wr),
+                              cfg.workload_config())
+            return lambda: run_frontend(cfg, fe)
+    else:
+        n_apps = int(rng.integers(1, 4))
+        picks = rng.choice(len(KERNELS), size=n_apps, replace=False)
+        apps = [KERNELS[i](n=int(rng.integers(64, 513)),
+                           seed=int(rng.integers(0, 1 << 16)))
+                for i in picks]
+        desc = "mix " + "+".join(KERNELS[i].__name__ for i in picks)
+        # full event budget: MSHR-throttled replay is saturation-hot
+        if cfg.weave == "event":
+            cfg = dataclasses.replace(
+                cfg, weave_events=cfg.clock().ticks_per_window_static)
+
+        def frontend(cfg):
+            wcfg = cfg.workload_config()
+            offs = [int(rng.integers(0, 4096))
+                    for _ in range(wcfg.n_cores)]
+            m = assign_traces(apps, split_cores(n_apps, wcfg.n_cores),
+                              phase_offsets=offs)
+            return lambda: run_frontend(cfg, TraceFrontend(m, wcfg))
+
+    desc = (f"{preset}/{stage}/{cfg.weave}/{n_sockets}s "
+            f"C={cfg.platform.dram.n_channels} {desc}")
+    return desc, cfg, frontend
+
+
+@pytest.mark.parametrize("seed", range(N_SEEDS))
+def test_fuzzed_stream_is_protocol_legal(seed):
+    rng = np.random.default_rng(0xC0FFEE + seed)
+    desc, cfg, frontend = draw_scenario(rng)
+    views, _ = jax.device_get(jax.jit(frontend(cfg))())
+    s = extract_stream(views, cfg.platform.dram)
+    assert len(s) > 0, desc
+    end_tick = int(cfg.clock().window_end_tick(cfg.windows - 1))
+    rep = check_stream(s, end_tick=end_tick)
+    assert rep.ok, f"{desc}: {rep.summary()}\n{rep.violations[:5]}"
