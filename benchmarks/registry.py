@@ -68,6 +68,11 @@ BENCHMARKS: dict[str, BenchSpec] = {s.name: s for s in sorted((
     BenchSpec("roofline", "benchmarks.roofline_bench",
               "HLO roofline model benchmarks",
               ()),
+    BenchSpec("serving", "benchmarks.serving",
+              "LLM-serving traffic on the memory platform: model x "
+              "preset x arrival-rate grid, per-request latency and "
+              "interface p50/p95/p99 under contention",
+              ("BENCH_serve.json",)),
     BenchSpec("app_validation", "benchmarks.app_validation",
               "per-app runtime MAPE vs per-preset anchors "
               "(--preset / --grid / --sockets)",

@@ -8,6 +8,12 @@ slots between ticks by overwriting that slot's cache rows.
 
 The decode step is the same `api.decode` lowered by the dry-run, so
 the engine's cost model *is* the decode cell of the roofline table.
+
+Slot admission itself — FIFO queue over a fixed slot pool — is
+factored into `SlotPool` so the memory-traffic serving scheduler
+(`repro.traces.llm.simulate_schedule`) drives the *same* admission
+policy the model engine does: the traffic lowered onto the memory
+platform follows the exact slot-recycling behaviour of this engine.
 """
 from __future__ import annotations
 
@@ -29,6 +35,49 @@ class Request:
     done: bool = False
 
 
+class SlotPool:
+    """FIFO admission over a fixed pool of continuous-batching slots.
+
+    Holds arbitrary request objects: a ``None`` slot is free, anything
+    else is an in-flight request.  `admit` fills free slots from the
+    queue in submission order and reports the ``(slot, request)``
+    pairs it placed, so callers (the model `Engine`, the serving
+    scheduler in `repro.traces.llm`) can run their per-admission setup
+    (cache reset, arrival bookkeeping) against one shared policy.
+    """
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.n_slots = n_slots
+        self.slots: list = [None] * n_slots
+        self.queue: list = []
+
+    def submit(self, req) -> None:
+        self.queue.append(req)
+
+    def admit(self) -> list:
+        """Fill free slots FIFO; returns the new ``(slot, req)`` pairs."""
+        placed = []
+        for s in range(self.n_slots):
+            if self.slots[s] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[s] = req
+                placed.append((s, req))
+        return placed
+
+    def free(self, s: int) -> None:
+        self.slots[s] = None
+
+    def active(self) -> list:
+        """In-flight ``(slot, req)`` pairs, slot order."""
+        return [(s, r) for s, r in enumerate(self.slots) if r is not None]
+
+    def pending(self) -> bool:
+        """True while anything is queued or in flight."""
+        return bool(self.queue) or any(r is not None for r in self.slots)
+
+
 class Engine:
     def __init__(self, api: ModelApi, params, *, n_slots: int = 4,
                  max_seq: int = 256, ctx=None, greedy: bool = True):
@@ -40,17 +89,35 @@ class Engine:
         if api.needs_ctx:
             assert ctx is not None, "modality ctx required"
             self.cache = api.fill_ctx(params, self.cache, ctx)
-        self.slots: list[Request | None] = [None] * n_slots
-        self.queue: list[Request] = []
+        self.pool = SlotPool(n_slots)
         self.last_tok = np.zeros((n_slots,), np.int32)
         self._remaining_prompt: list[list] = [[] for _ in range(n_slots)]
         self.greedy = greedy
         self._step = jax.jit(api.decode)
 
+    # the pool's lists are the live state; expose them under the
+    # historical attribute names (mutating e.g. ``eng.slots[0]`` is
+    # mutating the pool)
+    @property
+    def slots(self) -> list:
+        return self.pool.slots
+
+    @property
+    def queue(self) -> list:
+        return self.pool.queue
+
     # -- admission ---------------------------------------------------------
 
     def submit(self, req: Request):
-        self.queue.append(req)
+        if not req.prompt:
+            raise ValueError(
+                f"request {req.rid}: empty prompt (admission would have "
+                "no token to feed)")
+        if req.max_new < 1:
+            raise ValueError(
+                f"request {req.rid}: max_new must be >= 1, got "
+                f"{req.max_new}")
+        self.pool.submit(req)
 
     def _reset_slot(self, s: int):
         """Zero slot s's cache rows (length <- 0)."""
@@ -64,23 +131,23 @@ class Engine:
         self.cache["length"] = self.cache["length"].at[s].set(0)
 
     def _admit(self):
-        for s in range(self.n_slots):
-            if self.slots[s] is None and self.queue:
-                req = self.queue.pop(0)
-                self.slots[s] = req
-                self._reset_slot(s)
-                self.last_tok[s] = req.prompt[0]
-                self._remaining_prompt[s] = list(req.prompt[1:])
+        for s, req in self.pool.admit():
+            self._reset_slot(s)
+            self.last_tok[s] = req.prompt[0]
+            self._remaining_prompt[s] = list(req.prompt[1:])
 
     # -- decode tick ---------------------------------------------------------
 
-    def tick(self):
-        """One decode step over the slot pool."""
+    def tick(self) -> list[Request]:
+        """One decode step over the slot pool; returns requests that
+        completed on this tick (admission included — a one-token
+        prompt with ``max_new=1`` completes on its admission tick)."""
         self._admit()
         toks = jnp.asarray(self.last_tok)
         logits, self.cache = self._step(self.params, self.cache, toks)
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
-        for s, req in enumerate(self.slots):
+        completed = []
+        for s, req in enumerate(self.pool.slots):
             if req is None:
                 continue
             if self._remaining_prompt[s]:
@@ -91,19 +158,21 @@ class Engine:
             self.last_tok[s] = nxt[s]
             if len(req.out) >= req.max_new:
                 req.done = True
-                self.slots[s] = None
+                self.pool.free(s)
+                completed.append(req)
+        return completed
 
     def run(self, max_ticks: int = 1000) -> list[Request]:
+        """Tick until drained or ``max_ticks``; returns finished requests.
+
+        Hitting ``max_ticks`` is not an error: in-flight requests keep
+        their partial ``out`` and queued requests stay queued, so a
+        subsequent `run` (or `tick`) call resumes exactly where this
+        one stopped.
+        """
         done = []
-        pending = lambda: (self.queue
-                           or any(r is not None for r in self.slots))
         ticks = 0
-        submitted = []
-        while pending() and ticks < max_ticks:
-            before = [r for r in self.slots if r is not None]
-            self.tick()
+        while self.pool.pending() and ticks < max_ticks:
+            done.extend(self.tick())
             ticks += 1
-            for r in before:
-                if r.done and r not in done:
-                    done.append(r)
         return done

@@ -14,11 +14,19 @@ Public API:
 * `replay_grid`                         — preset x stage x app grid.
 * `anchor_runtime_ms`, `anchor_mix_ms`, `mape` — per-preset runtime
                                           anchors (solo and mixed).
+* `decode_cost`, `lower_decode`, `ServeScenario`, `simulate_schedule`,
+  `lower_serving`, `lower_scenario`, `request_latencies_ms` —
+  LLM-serving traffic lowered from the HLO cost model
+  (`repro.traces.llm`, docs/SERVING.md).
 """
 from repro.traces.anchors import (anchor_mix_ms, anchor_runtime_ms,
                                   anchor_suite_ms, mape)
 from repro.traces.frontend import TraceFrontend, TraceState
 from repro.traces.kernels import KERNELS, make_suite
+from repro.traces.llm import (ServeScenario, decode_cost, decode_hlo,
+                              lower_decode, lower_scenario, lower_serving,
+                              request_latencies_ms, serving_terms,
+                              simulate_schedule)
 from repro.traces.mix import (TraceMix, assign_traces, mix_stats,
                               split_cores, stack_mixes)
 from repro.traces.replay import (replay_grid, replay_mix, replay_mixes,
@@ -33,4 +41,7 @@ __all__ = [
     "replay_suite", "replay_stages", "replay_grid",
     "replay_mix", "replay_mixes",
     "anchor_runtime_ms", "anchor_suite_ms", "anchor_mix_ms", "mape",
+    "decode_hlo", "decode_cost", "lower_decode", "serving_terms",
+    "ServeScenario", "simulate_schedule", "lower_serving",
+    "lower_scenario", "request_latencies_ms",
 ]

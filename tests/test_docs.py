@@ -16,7 +16,8 @@ def _load_check_docs():
 
 
 def test_docs_doctests_pass():
-    for name in ("ARCHITECTURE.md", "VALIDATION.md", "WORKLOADS.md"):
+    for name in ("ARCHITECTURE.md", "VALIDATION.md", "WORKLOADS.md",
+                 "SERVING.md"):
         path = os.path.join(ROOT, "docs", name)
         res = doctest.testfile(path, module_relative=False, verbose=False)
         assert res.failed == 0, f"{name}: {res.failed} doctest failures"

@@ -1,8 +1,9 @@
 """Scenario fuzzer: every random run's command stream is legal.
 
 Each seed draws a random scenario — preset, ladder stage, workload
-(Mess operating point or a 1–3 app trace mix with random kernels,
-lengths, and per-core phase offsets), socket count, weave engine, and
+(Mess operating point, a 1–3 app trace mix with random kernels,
+lengths, and per-core phase offsets, or an LLM-serving trace from a
+random model config x arrival process), socket count, weave engine, and
 occasionally a synthetic device geometry — replays it with
 ``StageConfig(cmd_trace=True)``, and pushes the recorded stream
 through the full `repro.oracle.check_stream` rule set.  Any violation
@@ -64,7 +65,8 @@ def draw_scenario(rng):
         cfg = dataclasses.replace(
             cfg, platform=dataclasses.replace(cfg.platform, dram=d))
 
-    if rng.random() < 0.4:
+    kind = rng.random()
+    if kind < 0.35:
         pace = int(rng.integers(1, 49))
         wr = int(rng.integers(0, 65))
         desc = f"mess p={pace} wr={wr}"
@@ -73,6 +75,30 @@ def draw_scenario(rng):
             fe = MessFrontend(jnp.int32(pace), jnp.int32(wr),
                               cfg.workload_config())
             return lambda: run_frontend(cfg, fe)
+    elif kind < 0.65:
+        # LLM-serving traffic: random model config x arrival process x
+        # pool size lowered via repro.traces.llm — the JEDEC checker
+        # and differential oracle cover the serving perspective too
+        from repro.configs.registry import ARCH_ORDER, get_smoke
+        from repro.traces import ServeScenario, lower_scenario
+        model = str(rng.choice(ARCH_ORDER))
+        arrival = str(rng.choice(["poisson", "uniform", "burst"]))
+        scn = ServeScenario(
+            model=get_smoke(model), arrival=arrival,
+            rate=float(rng.choice([0.25, 0.5, 1.0, 2.0])),
+            n_requests=int(rng.integers(4, 17)),
+            n_slots=int(rng.integers(1, 7)),
+            seed=int(rng.integers(0, 1 << 16)))
+        trace, _, _ = lower_scenario(scn)
+        desc = f"serve {model} {arrival} r={scn.rate} s={scn.n_slots}"
+        # serving replay is MSHR-hot: covering event budget
+        if cfg.weave == "event":
+            cfg = dataclasses.replace(
+                cfg, weave_events=cfg.clock().ticks_per_window_static)
+
+        def frontend(cfg):
+            return lambda: run_frontend(
+                cfg, TraceFrontend(trace, cfg.workload_config()))
     else:
         n_apps = int(rng.integers(1, 4))
         picks = rng.choice(len(KERNELS), size=n_apps, replace=False)

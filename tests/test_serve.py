@@ -63,3 +63,89 @@ def test_slot_reuse_resets_state():
     done = eng.run()
     assert len(done) == 2
     assert done[0].out == done[1].out     # identical prompt -> identical out
+
+
+# ------------------------------------------------ SlotPool + hardening
+
+def test_slotpool_fifo_and_recycling():
+    from repro.serve.engine import SlotPool
+    pool = SlotPool(2)
+    for i in range(5):
+        pool.submit(i)
+    placed = pool.admit()
+    assert placed == [(0, 0), (1, 1)]          # FIFO into slot order
+    assert pool.admit() == []                  # no free slot -> no-op
+    assert pool.pending() and len(pool.queue) == 3
+    pool.free(1)
+    assert pool.admit() == [(1, 2)]            # recycled slot, next in line
+    assert [r for _, r in pool.active()] == [0, 2]
+    for s, _ in pool.active():
+        pool.free(s)
+    assert pool.admit() == [(0, 3), (1, 4)]
+    pool.free(0)
+    pool.free(1)
+    assert not pool.pending()
+
+
+def test_slotpool_validates_n_slots():
+    import pytest
+    from repro.serve.engine import SlotPool
+    with pytest.raises(ValueError):
+        SlotPool(0)
+
+
+def test_submit_beyond_n_slots_queues():
+    """More submissions than slots: the surplus waits in the queue and
+    drains as slots recycle — nothing is dropped or double-placed."""
+    api, params = setup()
+    eng = Engine(api, params, n_slots=2, max_seq=64)
+    for i in range(6):
+        eng.submit(Request(rid=i, prompt=[1 + i], max_new=3))
+    eng.tick()
+    assert sum(r is not None for r in eng.slots) == 2
+    assert len(eng.queue) == 4                 # surplus queued, not lost
+    done = eng.run()
+    assert sorted(r.rid for r in done) == list(range(6))
+    assert all(len(r.out) == 3 for r in done)
+
+
+def test_zero_length_request_rejected():
+    import pytest
+    api, params = setup()
+    eng = Engine(api, params, n_slots=1, max_seq=64)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(Request(rid=0, prompt=[], max_new=4))
+    with pytest.raises(ValueError, match="max_new"):
+        eng.submit(Request(rid=1, prompt=[3], max_new=0))
+    assert not eng.pool.pending()              # nothing half-submitted
+
+
+def test_run_max_ticks_resumes():
+    """`run` hitting max_ticks mid-schedule is a pause, not a loss:
+    queued requests stay queued, partial outputs are kept, and a
+    second `run` finishes the schedule exactly."""
+    api, params = setup()
+    eng = Engine(api, params, n_slots=1, max_seq=64)
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=[5 + i, 2], max_new=4))
+    done = eng.run(max_ticks=3)
+    assert done == []                          # nobody finished in 3 ticks
+    assert len(eng.queue) == 2                 # rids 1,2 still queued
+    partial = eng.slots[0]
+    assert partial.rid == 0 and 0 < len(partial.out) < 4
+    done += eng.run()
+    assert sorted(r.rid for r in done) == [0, 1, 2]
+    assert all(len(r.out) == 4 for r in done)
+
+
+def test_same_tick_admit_and_complete_collected():
+    """A one-token prompt with max_new=1 completes on its admission
+    tick; `run` must still return it (regression: the old `run`
+    snapshotted in-flight requests before ticking and lost these)."""
+    api, params = setup()
+    eng = Engine(api, params, n_slots=2, max_seq=64)
+    eng.submit(Request(rid=0, prompt=[9], max_new=1))
+    done = eng.run()
+    assert [r.rid for r in done] == [0]
+    assert len(done[0].out) == 1 and done[0].done
+    assert not eng.pool.pending()

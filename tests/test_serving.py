@@ -1,0 +1,253 @@
+"""Serving-traffic oracle: golden grid + percentile references.
+
+Pins the LLM-serving lowering (`repro.traces.llm`) the same way
+`tests/test_event_weave.py` pins the kernel traces:
+
+* serving-derived trace replay is **bit-identical** between the dense
+  and event weave engines across ddr4_2666 / ddr5_4800 / hbm2e x 1-2
+  sockets (serving traces are MSHR-hot, so the event cells run under a
+  covering budget — the `full_budget` contract);
+* `hist_percentiles` is pinned against a hand-computed log2-histogram
+  reference AND recomputed independently at the consumer
+  (`benchmarks.serving.cell_percentiles`), so interface-percentile
+  regressions are caught where they are reported, not just at the
+  unit level;
+* the scheduler respects `SlotPool` admission invariants and the
+  per-step traffic model is *exactly* the HLO cost model's output.
+"""
+import dataclasses
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke
+from repro.core import get_stage
+from repro.core.platform import run_frontend
+from repro.obs import hist_percentiles
+from repro.traces import (ServeScenario, decode_cost, lower_decode,
+                          lower_scenario, replay_suite,
+                          request_latencies_ms, serving_terms,
+                          simulate_schedule, stack_traces)
+from repro.traces.frontend import TraceFrontend
+from repro.traces.llm import STREAMS, arrival_steps, step_stream_bytes
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+FAST = dict(windows=6, warmup=2)
+
+
+def _scenario(model="tinyllama-1.1b", **kw):
+    kw.setdefault("arrival", "poisson")
+    kw.setdefault("rate", 0.5)
+    kw.setdefault("n_requests", 10)
+    kw.setdefault("n_slots", 3)
+    return ServeScenario(model=get_smoke(model), **kw)
+
+
+def serving(model="tinyllama-1.1b", **kw):
+    """Golden-grid frontend builder over a lowered serving trace."""
+    trace, _, _ = lower_scenario(_scenario(model, **kw))
+
+    def build(cfg):
+        return lambda: run_frontend(
+            cfg, TraceFrontend(trace, cfg.workload_config()))
+
+    build.full_budget = True        # serving replay is MSHR-hot
+    return build
+
+
+def run_pair(stage, preset, frontend, n_sockets=1):
+    out = {}
+    for weave in ("dense", "event"):
+        cfg = get_stage(stage, preset=preset, n_sockets=n_sockets,
+                        weave=weave, **FAST)
+        if weave == "event" and getattr(frontend, "full_budget", False):
+            cfg = dataclasses.replace(
+                cfg, weave_events=cfg.clock().ticks_per_window_static)
+        out[weave] = jax.device_get(jax.jit(frontend(cfg))())
+    return out["dense"], out["event"]
+
+
+SEMANTIC_VIEWS = ("sim_bw_gbs", "sim_lat_ns", "if_bw_gbs", "if_lat_ns",
+                  "app_bw_gbs", "app_lat_ns", "chase_lat_ns",
+                  "n_rd", "n_wr", "l_ir_final", "injected")
+
+
+def assert_bit_identical(dense, event):
+    (vd, od), (ve, oe) = dense, event
+    for name, a, b in zip(od._fields, od, oe):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"WindowOut.{name} differs between weave engines")
+    for key in SEMANTIC_VIEWS:
+        np.testing.assert_array_equal(
+            np.asarray(vd[key]), np.asarray(ve[key]),
+            err_msg=f"view {key!r} differs between weave engines")
+    assert int(np.sum(ve["weave_sat"])) == 0, \
+        "event budget saturated on a serving golden-grid point"
+
+
+# every preset x both socket counts, model families varied across cells
+GRID = [
+    ("10-delay-buffer", "ddr4_2666", ("tinyllama-1.1b", "poisson"), 1),
+    ("04-model-correct", "ddr5_4800", ("xlstm-1.3b", "uniform"), 1),
+    ("01-baseline", "hbm2e", ("arctic-480b", "burst"), 2),
+    ("10-delay-buffer", "ddr5_4800", ("zamba2-2.7b", "poisson"), 2),
+]
+_IDS = [f"{g[0]}-{g[1]}-{g[2][0]}-{g[3]}s" for g in GRID]
+
+
+@pytest.mark.parametrize("stage,preset,cell,n_sockets", GRID, ids=_IDS)
+def test_serving_replay_bit_identical(stage, preset, cell, n_sockets):
+    model, arrival = cell
+    frontend = serving(model, arrival=arrival)
+    dense, event = run_pair(stage, preset, frontend, n_sockets)
+    assert_bit_identical(dense, event)
+
+
+# ------------------------------------------------- percentile oracle
+
+def test_hist_percentiles_hand_computed():
+    """Literal reference: 2 samples in bucket 3 ([8,16)), 2 in bucket
+    5 ([32,64)).  p50's target (2.0) lands exactly on bucket 3's
+    cumulative boundary -> 8 * (1 + 2/2) = 16.0; p95's target 3.8 is
+    0.9 into bucket 5 -> 32 * 1.9 = 60.8; p99 -> 32 * 1.98 = 63.36."""
+    h = np.zeros(24)
+    h[3] = 2
+    h[5] = 2
+    got = hist_percentiles(h, (0.5, 0.95, 0.99))
+    np.testing.assert_allclose(got, [16.0, 60.8, 63.36], rtol=1e-12)
+    # window/channel leading axes reduce by summation: splitting the
+    # same counts across planes must not move any percentile
+    split = np.zeros((2, 3, 24))
+    split[0, 1, 3] = 2
+    split[1, 2, 5] = 2
+    np.testing.assert_allclose(
+        hist_percentiles(split, (0.5, 0.95, 0.99)), got, rtol=1e-12)
+
+
+def test_percentiles_at_the_consumer():
+    """The benchmark's reported if_p* derive from the replayed
+    telemetry histograms exactly as an independent reimplementation
+    says they should — a `hist_percentiles` regression surfaces in
+    BENCH_serve.json numbers, not only in unit tests."""
+    sys.path.insert(0, ROOT)
+    try:
+        from benchmarks.serving import cell_percentiles
+    finally:
+        sys.path.remove(ROOT)
+    trace, _, _ = lower_scenario(_scenario())
+    cfg = get_stage("10-delay-buffer", preset="ddr5_4800", telemetry=True,
+                    **FAST)
+    cfg = dataclasses.replace(
+        cfg, weave_events=cfg.clock().ticks_per_window_static)
+    out = replay_suite(cfg, stack_traces([trace]))
+    got = cell_percentiles(out, 0)
+
+    # independent quantile-from-log2-histogram reimplementation
+    h = np.asarray(out["tele_hist_if_ps"][0], np.float64)
+    h = h.reshape(-1, h.shape[-1]).sum(axis=0)
+    cum, total = np.cumsum(h), h.sum()
+    assert total > 0
+    for q, key in ((0.5, "if_p50_ns"), (0.95, "if_p95_ns"),
+                   (0.99, "if_p99_ns")):
+        b = next(i for i, c in enumerate(cum) if c >= q * total)
+        prev = cum[b - 1] if b else 0.0
+        frac = min(max((q * total - prev) / max(h[b], 1e-12), 0.0), 1.0)
+        want_ns = (2.0 ** b) * (1.0 + frac) / 1e3
+        np.testing.assert_allclose(got[key], want_ns, rtol=1e-9)
+
+
+def test_request_latencies_byte_weighted():
+    """Request latency = service time of the request's step span,
+    byte-weighted: a hand-built schedule with known per-step bytes."""
+    scn = _scenario(arrival="burst", n_requests=4, n_slots=2)
+    trace, sched, info = lower_scenario(scn)
+    lat = request_latencies_ms(sched, info, runtime_ms=10.0)
+    assert lat.shape == (4,)
+    assert (lat > 0).all()
+    cum = np.concatenate([[0], np.asarray(info["cum_bytes"], np.float64)])
+    for r, l in zip(sched.requests, lat):
+        want = 10.0 * (cum[r.finish + 1] - cum[r.arrival]) / cum[-1]
+        np.testing.assert_allclose(l, want, rtol=1e-12)
+    # burst arrivals all land at step 0, so the last request to finish
+    # spans the whole schedule -> its latency is the full runtime
+    assert all(r.arrival == 0 for r in sched.requests)
+    last = max(range(4), key=lambda i: sched.requests[i].finish)
+    np.testing.assert_allclose(lat[last], 10.0, rtol=1e-12)
+
+
+# ------------------------------------------------ scheduler invariants
+
+@pytest.mark.parametrize("arrival", ["poisson", "uniform", "burst"])
+def test_schedule_slotpool_invariants(arrival):
+    scn = _scenario(arrival=arrival, n_requests=16, n_slots=4)
+    sched = simulate_schedule(scn)
+    # occupancy bounded by the pool, every step accounted
+    assert (sched.n_active <= scn.n_slots).all()
+    assert (sched.ctx_sum >= 0).all()
+    assert sched.steps == len(sched.ctx_sum)
+    by_rid = sorted(sched.requests, key=lambda r: r.rid)
+    for r in by_rid:
+        assert 0 <= r.arrival <= r.admit <= r.finish
+        # admit-to-finish span is exactly the token count
+        assert r.finish - r.admit + 1 == r.total
+    # FIFO: admission order follows arrival order (rid breaks ties)
+    admits = [r.admit for r in by_rid]
+    assert admits == sorted(admits)
+    # total work conserved: sum of busy slot-steps == sum of tokens
+    assert int(sched.n_active.sum()) == sum(r.total for r in by_rid)
+
+
+def test_arrival_distributions():
+    base = _scenario(n_requests=32, rate=0.5)
+    pois = arrival_steps(base)
+    assert (np.diff(pois) >= 0).all() and pois[0] >= 0
+    uni = arrival_steps(dataclasses.replace(base, arrival="uniform"))
+    np.testing.assert_array_equal(uni, np.arange(32) * 2)
+    bur = arrival_steps(dataclasses.replace(base, arrival="burst"))
+    assert (bur == 0).all()
+    with pytest.raises(ValueError):
+        arrival_steps(dataclasses.replace(base, arrival="pareto"))
+    with pytest.raises(ValueError):
+        arrival_steps(dataclasses.replace(base, rate=0.0))
+    # determinism: same seed -> same process
+    np.testing.assert_array_equal(pois, arrival_steps(base))
+
+
+# ------------------------------------------- exact traffic accounting
+
+def test_bilinear_model_is_exact():
+    """`serving_terms` is a *model* only in form: at any occupancy it
+    reproduces `decode_cost`'s per-stream bytes exactly, so the
+    serving trace is the HLO cost model evaluated per step."""
+    for model in ("tinyllama-1.1b", "arctic-480b", "zamba2-2.7b"):
+        cfg = get_smoke(model)
+        terms = serving_terms(cfg)
+        for B, S in ((1, 1), (3, 7), (6, 250)):
+            want = decode_cost(cfg, B, S)["stream_bytes"]
+            got = step_stream_bytes(terms, B, B * S)
+            assert got == {s: want[s] for s in STREAMS}, (model, B, S)
+
+
+def test_serving_trace_conserves_bytes():
+    trace, _, info = lower_scenario(_scenario(), target_step_lines=256)
+    emitted = int(trace.length) * info["line_bytes"] * info["shard"]
+    tol = len(STREAMS) * info["line_bytes"] * info["shard"]
+    assert abs(emitted - info["bytes_modeled"]) <= tol
+    assert info["bytes_modeled"] == sum(info["stream_bytes"].values())
+    assert info["bytes_modeled"] == sum(info["phase_bytes"].values())
+
+
+def test_lower_decode_step_scaling():
+    """steps=k emits ~k x the lines of steps=1 at fixed shard."""
+    cfg = get_smoke("qwen2-72b")
+    _, i1 = lower_decode(cfg, 2, 64, steps=1, target_lines=1024)
+    t3, i3 = lower_decode(cfg, 2, 64, steps=3, target_lines=1024)
+    assert i3["bytes_modeled"] == 3 * i1["bytes_modeled"]
+    emitted = int(t3.length) * i3["line_bytes"] * i3["shard"]
+    tol = len(STREAMS) * i3["line_bytes"] * i3["shard"]
+    assert abs(emitted - i3["bytes_modeled"]) <= tol

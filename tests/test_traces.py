@@ -152,3 +152,37 @@ def test_trace_frontend_write_mix_matches_mess():
     assert tr_wr == pytest.approx(mess_wr, abs=0.05)
     assert out["sim_bw_gbs"][0] == pytest.approx(
         float(mess["sim_bw_gbs"]), rel=0.2)
+
+
+# ------------------------------------------- LLM lowering conservation
+
+def test_llm_lowering_conserves_bytes_all_configs():
+    """For EVERY registered model config, the lowered decode trace
+    conserves `hlo_cost.analyze` bytes within line-rounding: per
+    traffic stream the emitted line count is the floor of the exact
+    byte total over one line's quantum, so the whole trace is within
+    one line per stream.  (`decode_cost` itself raises if the
+    renderer's mirrored accounting drifts from `analyze` by a single
+    byte, so this also re-verifies the renderer on every config.)"""
+    from _proptest import forall, integers
+    from repro.configs.registry import ARCH_ORDER, get_config
+    from repro.traces import decode_cost, lower_decode
+    from repro.traces.llm import STREAMS
+
+    for name in ARCH_ORDER:
+        cfg = get_config(name)
+
+        @forall(n_cases=4, seed=sum(map(ord, name)),
+                batch=integers(1, 8), seq=integers(1, 2048))
+        def check(batch, seq):
+            cost = decode_cost(cfg, batch, seq)
+            trace, info = lower_decode(cfg, batch, seq,
+                                       target_lines=512)
+            assert info["bytes_modeled"] == cost["bytes"]
+            emitted = int(trace.length) * info["line_bytes"] \
+                * info["shard"]
+            tol = len(STREAMS) * info["line_bytes"] * info["shard"]
+            assert abs(emitted - info["bytes_modeled"]) <= tol, \
+                (name, batch, seq, emitted, info["bytes_modeled"])
+
+        check()
